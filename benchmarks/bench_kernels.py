@@ -1,0 +1,59 @@
+"""Benchmark: hardware-aware attention (survey dim 3c).
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled -- correctness only), so the timing rows
+compare the XLA-compiled blockwise flash-style path against naive
+materialized attention, plus an interpret-mode allclose spot check. True
+kernel timing belongs on a TPU runtime (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jit
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import blockwise_sdpa
+
+
+def _naive(q, k, v, pos):
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    mask = pos[None, :] <= pos[:, None]
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1)
+
+
+def run() -> None:
+    rng = np.random.RandomState(0)
+    for s in (512, 2048):
+        b, kvh, g, d = 1, 2, 2, 64
+        q = jnp.asarray(rng.randn(b, s, kvh, g, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, s, kvh, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, s, kvh, d), jnp.float32)
+        pos = jnp.arange(s)
+        us_naive = time_jit(jax.jit(lambda *a: _naive(*a, pos)), q, k, v,
+                            iters=3)
+        us_block = time_jit(jax.jit(
+            lambda qq, kk, vv: blockwise_sdpa(qq, kk, vv, q_pos=pos,
+                                              k_pos=pos, causal=True,
+                                              block_k=512)), q, k, v,
+            iters=3)
+        emit(f"kern/flash_xla/s{s}", us_block,
+             f"naive_us={us_naive:.0f};peak_mem_ratio~{512 / s:.2f}")
+    # interpret-mode correctness spot check (the TPU kernel's oracle gate)
+    q = jnp.asarray(rng.randn(1, 4, 64, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 64, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 64, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.abs(out - expect).max())
+    emit("kern/pallas_interpret_allclose", 0.0, f"max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Video token compression walkthrough (survey dim 1-2): a synthetic
+"video" with static background + moving object, compressed by each
+strategy, reporting token counts and reconstruction quality.
+
+    PYTHONPATH=src python examples/compress_video.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.token_compression import video as V
+
+
+def synthetic_video(frames=16, patches=64, d=32, seed=0):
+    """Static background (identical across frames) + small moving blob."""
+    rng = np.random.RandomState(seed)
+    bg = rng.randn(patches, d) * 0.3
+    vid = np.tile(bg, (frames, 1, 1))
+    blob = rng.randn(d) * 2.0
+    for f in range(frames):
+        p = (f * 3) % patches
+        vid[f, p] = blob + 0.1 * rng.randn(d)
+    return jnp.asarray(vid[None], jnp.float32)
+
+
+def main():
+    vid = synthetic_video()
+    b, f, p, d = vid.shape
+    total = f * p
+    print(f"video: {f} frames x {p} patches = {total} tokens")
+
+    sims = V.frame_similarity(vid)
+    print(f"adjacent-frame similarity: mean={float(sims.mean()):.3f} "
+          f"(temporal redundancy)")
+
+    merged, info = V.temporal_merge(vid, num_segments=4)
+    print(f"Chat-UniVi temporal merge : {total} -> "
+          f"{merged.shape[1] * merged.shape[2]} tokens")
+
+    two, info = V.llama_vid_compress(vid)
+    print(f"LLaMA-VID 2-token/frame   : {total} -> {two.shape[1]} tokens")
+
+    ratios = V.dycoke_ratio(vid)
+    print(f"DyCoke per-frame ratios   : min={float(ratios.min()):.2f} "
+          f"max={float(ratios.max()):.2f} "
+          f"(moving-object frames get more budget)")
+
+    comp, info = V.dynamic_compress(vid, token_budget=96)
+    print(f"Dynamic-VLM budget=96     : {total} -> {comp.shape[1]} tokens")
+
+    ff, info = V.framefusion(vid, keep=64)
+    print(f"FrameFusion prune+merge   : {total} -> {ff.shape[1]} tokens "
+          f"(absorbed {info.get('absorbed', '?')})")
+
+    # the blob (the only moving content) must survive dynamic compression
+    blob_tok = vid[0, 0, 0]
+    sims_to_blob = jnp.einsum("d,btd->bt", blob_tok / jnp.linalg.norm(
+        blob_tok), comp / jnp.linalg.norm(comp, axis=-1, keepdims=True))
+    print(f"moving-object preserved   : max cos sim "
+          f"{float(sims_to_blob.max()):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Multimodal speculative decoding demo (survey dim 4a).
+
+A language-only draft speculates for a multimodal target (Gagrani et al.):
+the draft never sees the image; the target verifies with full context.
+A distilled draft shows real acceptance; LANTERN relaxation on top.
+
+    PYTHONPATH=src python examples/spec_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.decoding import acceptance_rate, speculative_generate
+from repro.models import build
+from repro.training import OptimizerConfig, adamw_init, adamw_update
+
+
+def distill_draft(target, t_params, draft, d_params, vocab, steps=60):
+    """Train the draft to mimic the target's next-token logits (tiny KD)."""
+    oc = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=steps,
+                         weight_decay=0.0)
+    opt = adamw_init(d_params)
+    rng = np.random.RandomState(0)
+
+    @jax.jit
+    def step(d_params, opt, tokens):
+        t_logits, _ = target.forward(t_params, {"tokens": tokens})
+        t_probs = jax.nn.softmax(t_logits, -1)
+
+        def loss_fn(p):
+            d_logits, _ = draft.forward(p, {"tokens": tokens})
+            lsm = jax.nn.log_softmax(d_logits, -1)
+            return -(t_probs * lsm).sum(-1).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(d_params)
+        d_params, opt, _ = adamw_update(oc, grads, opt, d_params)
+        return d_params, opt, loss
+
+    for s in range(steps):
+        tokens = jnp.asarray(rng.randint(1, vocab, (8, 24)), jnp.int32)
+        d_params, opt, loss = step(d_params, opt, tokens)
+        if s % 20 == 0:
+            print(f"  distill step {s:3d} KD-loss {float(loss):.4f}")
+    return d_params
+
+
+def main():
+    cfg = get_config("qwen2-vl-2b", smoke=True).with_(vocab_size=512)
+    target = build(cfg)
+    # train the target briefly so its outputs have learnable structure
+    # (an untrained target's greedy stream is noise no draft can match)
+    from repro.training import SyntheticDataConfig, train_loop
+    print("== training target on the synthetic stream")
+    t_out = train_loop(target,
+                       oc=OptimizerConfig(lr=2e-3, warmup_steps=5,
+                                          total_steps=80),
+                       dc=SyntheticDataConfig(batch=8, seq_len=32),
+                       num_steps=80, log_every=40)
+    t_params = t_out["params"]
+    # language-only draft: NO visual pathway (dense family, tiny)
+    dcfg = get_config("phi4-mini-3.8b", smoke=True).with_(
+        num_layers=1, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+        head_dim=32, vocab_size=cfg.vocab_size)
+    draft = build(dcfg)
+    d_params = draft.init(jax.random.PRNGKey(1))
+
+    rng = np.random.RandomState(2)
+    prompt = list(rng.randint(1, cfg.vocab_size, size=20))
+    ve = jnp.asarray(rng.randn(cfg.num_visual_tokens, cfg.d_model) * 0.02,
+                     jnp.float32)
+    n_new, gamma = 24, 4
+
+    print("== random draft (no training)")
+    toks0, s0 = speculative_generate(target, draft, t_params, d_params,
+                                     prompt, max_new_tokens=n_new,
+                                     gamma=gamma, visual_embeds=ve)
+    print(f"  acceptance={acceptance_rate(s0):.2f} "
+          f"target_calls={s0.target_calls} (vs {n_new} sequential)")
+
+    print("== distilled language-only draft")
+    d_params = distill_draft(target, t_params, draft, d_params,
+                             cfg.vocab_size, steps=150)
+    toks1, s1 = speculative_generate(target, draft, t_params, d_params,
+                                     prompt, max_new_tokens=n_new,
+                                     gamma=gamma, visual_embeds=ve)
+    print(f"  acceptance={acceptance_rate(s1):.2f} "
+          f"target_calls={s1.target_calls} "
+          f"call_reduction={n_new / s1.target_calls:.2f}x")
+
+    print("== + LANTERN relaxed acceptance (temperature 0.8)")
+    toks2, s2 = speculative_generate(target, draft, t_params, d_params,
+                                     prompt, max_new_tokens=n_new,
+                                     gamma=gamma, visual_embeds=ve,
+                                     temperature=0.8, lantern_k=16,
+                                     lantern_delta=0.3)
+    print(f"  acceptance={acceptance_rate(s2):.2f} "
+          f"target_calls={s2.target_calls}")
+
+    # fidelity: greedy speculative == greedy target
+    assert toks1[:8] == toks0[:8], "greedy outputs must agree"
+    print("greedy fidelity check passed")
+
+
+if __name__ == "__main__":
+    main()

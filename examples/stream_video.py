@@ -1,0 +1,128 @@
+"""Streaming-video serving under a FIXED memory budget -- the survey's §V
+open problem: "live video restricts access to future patches ... the
+infinite context becomes a severe memory bottleneck as the KV cache grows".
+
+Pipeline per arriving clip (no access to future frames):
+  1. DyCoke complexity ratio decides the clip's token budget (dim 1),
+  2. FrameFusion prune+merge compresses the clip's patches to that budget,
+  3. compressed tokens prefill/extend into the VLM's cache,
+  4. when the cache nears capacity, StreamingLLM-style compaction keeps
+     attention sinks + recent context (dim 2a) -- memory stays bounded
+     while the stream is unbounded.
+
+    PYTHONPATH=src python examples/stream_video.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.kv_cache.selection import select_streaming
+from repro.core.token_compression import video as V
+from repro.models import build
+
+
+def synthetic_stream(n_clips, frames=8, patches=16, d=256, seed=0):
+    """Alternating static scenery and high-motion clips."""
+    rng = np.random.RandomState(seed)
+    bg = rng.randn(patches, d) * 0.3
+    for c in range(n_clips):
+        clip = np.tile(bg, (frames, 1, 1))
+        if c % 2 == 1:                       # action clip: everything moves
+            clip += rng.randn(frames, patches, d) * 1.5
+        else:                                # static clip: tiny jitter
+            clip += rng.randn(frames, patches, d) * 0.02
+        yield jnp.asarray(clip[None], jnp.float32)
+
+
+def main():
+    cfg = get_config("qwen2-vl-2b", smoke=True)
+    # position-exact ring cache (slot_pos) so compaction keeps RoPE honest
+    cache_len = 192
+    cfg = cfg.with_(sliding_window=cache_len)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    budget_hi, budget_lo = 48, 8             # tokens per clip
+    kv_budget = 128                           # compaction target
+
+    cache = model.init_cache(1, cache_len, windowed=True)
+    extend = jax.jit(model.extend)
+    pos = 0
+    total_patches = 0
+    print(f"{'clip':>4s} {'kind':>8s} {'ratio':>6s} {'tokens':>7s} "
+          f"{'cache_pos':>9s} {'compacted':>9s}")
+    for ci, clip in enumerate(synthetic_stream(8)):
+        b, f, p, d = clip.shape
+        total_patches += f * p
+        # 1-2. complexity-adaptive compression (causal: this clip only)
+        ratio = float(V.dycoke_ratio(clip).mean())
+        budget = int(budget_lo + (budget_hi - budget_lo) * ratio)
+        toks, _ = V.framefusion(clip, keep=budget)
+        # 3. project into the backbone stream: here patches are already
+        #    d_model-sized stand-ins (assignment frontend carve-out); feed
+        #    them through extend as embeddings via the projector-free path
+        ve = toks.astype(jnp.float32)
+        # extend() embeds token IDS; for patch embeddings drive the layers
+        # directly through prefill-on-extend semantics: reuse extend with a
+        # pseudo-token trick is wrong -- instead run decode-style append:
+        h = ve  # [1, budget, d]
+        # score the clip against running context via one forward append
+        # (cheap demonstration: append each clip's compressed tokens)
+        from repro.models import layers as L
+        from repro.models import attention as A
+        cos, sin = model._cos_sin(
+            1, jnp.broadcast_to(pos + jnp.arange(budget)[None],
+                                (1, budget)))
+        lp_all, lcache_all = params["layers"], cache["layers"]
+        xs = h
+        new_lc = []
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[li], lp_all)
+            lc = jax.tree.map(lambda a: a[li], lcache_all)
+            hh = L.apply_norm(lp["ln1"], xs, cfg.norm)
+            a_out, lc = A.append_attention(lp["attn"], hh, cos, sin, cfg,
+                                           lc, pos)
+            xs = xs + a_out
+            hh = L.apply_norm(lp["ln2"], xs, cfg.norm)
+            xs = xs + L.apply_mlp(lp["mlp"], hh, cfg.activation)
+            new_lc.append(lc)
+        cache = dict(cache, layers=jax.tree.map(
+            lambda *ls: jnp.stack(ls), *new_lc))
+        pos += budget
+
+        # 4. bounded memory: compact when past the KV budget
+        compacted = False
+        if pos > kv_budget:
+            lc = cache["layers"]
+            k, v, sp = lc["k"], lc["v"], lc["slot_pos"]
+            L_n = k.shape[0]
+            outk, outv, outs = [], [], []
+            for li in range(L_n):
+                kk, vv, kept = select_streaming(
+                    k[li, :, :pos], v[li, :, :pos], budget=kv_budget,
+                    pos=sp[li, 0, :pos], sinks=4)
+                pad = k.shape[2] - kv_budget
+                outk.append(jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                outv.append(jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                outs.append(jnp.pad(kept.astype(jnp.int32),
+                                    ((0, 0), (0, pad)),
+                                    constant_values=-1))
+            cache = dict(cache, layers=dict(
+                lc, k=jnp.stack(outk), v=jnp.stack(outv),
+                slot_pos=jnp.stack(outs)))
+            compacted = True
+
+        kind = "static" if ci % 2 == 0 else "action"
+        print(f"{ci:4d} {kind:>8s} {ratio:6.2f} {budget:7d} {pos:9d} "
+              f"{str(compacted):>9s}")
+    kept = min(pos, kv_budget)
+    print(f"\nstream: {total_patches} raw patches -> cache holds <= "
+          f"{kv_budget} entries ({kept} live) -- memory bounded while the "
+          f"stream is not; action clips got "
+          f"{budget_hi}/{budget_lo} = {budget_hi // budget_lo}x the budget "
+          f"of static ones")
+
+
+if __name__ == "__main__":
+    main()

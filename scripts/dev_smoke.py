@@ -1,0 +1,48 @@
+"""Dev-loop smoke: forward/loss/prefill/decode for every smoke config."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.models import build
+
+only = sys.argv[1:] or ARCHS
+ok = True
+for arch in only:
+    cfg = get_config(arch, smoke=True)
+    try:
+        model = build(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        b, s = 2, 16
+        batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+        if cfg.family == "vlm":
+            batch["visual_embeds"] = jax.random.normal(
+                key, (b, cfg.num_visual_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(
+                key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        logits, aux = jax.jit(model.forward)(params, batch)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), "fwd NaN"
+        loss, metrics = model.loss(params, batch)
+        assert np.isfinite(float(loss)), "loss NaN"
+        # prefill + 3 decode steps
+        pl_logits, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=s + 8))(params, batch)
+        tok = jnp.argmax(pl_logits[:, -1], -1)[:, None].astype(jnp.int32)
+        step = jax.jit(model.decode_step)
+        for i in range(3):
+            lg, cache = step(params, cache, tok, s + i)
+            assert np.isfinite(np.asarray(lg, np.float32)).all(), "dec NaN"
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        print(f"OK   {arch:22s} loss={float(loss):.4f} "
+              f"logits={tuple(logits.shape)}")
+    except Exception as e:
+        ok = False
+        print(f"FAIL {arch}: {e}")
+        traceback.print_exc()
+print("ALL OK" if ok else "FAILURES")
+sys.exit(0 if ok else 1)

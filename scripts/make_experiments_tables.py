@@ -1,0 +1,91 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+experiments/dryrun_*.json.
+
+    PYTHONPATH=src python scripts/make_experiments_tables.py
+"""
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "n/a"
+    return f"{b / 1e9:.2f}"
+
+
+def roofline_table(results):
+    lines = [
+        "| arch | shape | step | peak GB/dev | compute s | memory s | "
+        "collective s | dominant | useful FLOPs frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| SKIPPED ({r['reason'][:40]}…) | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | FAILED: "
+                         f"{r['error'][:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        peak = r["memory"].get("peak_bytes")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{fmt_bytes(peak)} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"**{rf['dominant']}** | {rf['useful_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(results, chips):
+    ok = sum(1 for r in results.values() if r["status"] == "ok")
+    sk = sum(1 for r in results.values() if r["status"] == "skipped")
+    fail = sum(1 for r in results.values() if r["status"] == "fail")
+    coll = {}
+    for r in results.values():
+        if r["status"] != "ok":
+            continue
+        for op, n in (r["roofline"]["collective_counts"] or {}).items():
+            coll[op] = coll.get(op, 0) + n
+    return (f"{ok} ok / {sk} skipped / {fail} failed on {chips} chips; "
+            f"collective ops across grid: "
+            + ", ".join(f"{k}={v}" for k, v in sorted(coll.items())))
+
+
+def main():
+    sections = []
+    for tag, chips in (("singlepod", 256), ("multipod", 512)):
+        path = os.path.join(ROOT, f"dryrun_{tag}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            results = json.load(f)
+        block = (f"### {tag} ({chips} chips)\n\n"
+                 + dryrun_summary(results, chips) + "\n\n"
+                 + roofline_table(results) + "\n")
+        print(block)
+        sections.append(block)
+
+    # splice the single-pod table into EXPERIMENTS.md at the marker
+    exp = os.path.join(ROOT, "..", "EXPERIMENTS.md")
+    if sections and os.path.exists(exp):
+        with open(exp) as f:
+            text = f.read()
+        marker = "<!-- ROOFLINE_TABLE -->"
+        if marker in text:
+            pre = text.split(marker)[0]
+            post = text.split(marker)[-1]
+            # drop any previously spliced table (up to the next heading)
+            idx = post.find("\nObservations:")
+            post = post[idx:] if idx >= 0 else post
+            with open(exp, "w") as f:
+                f.write(pre + marker + "\n\n" + sections[0] + post)
+            print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, CompressionConfig
+from repro.configs.shapes import SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K
+
+_MODULES = {
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "granite-34b": "repro.configs.granite_34b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+ARCHS = tuple(_MODULES)
+
+# (arch, shape) pairs excluded from the dry-run grid, with reasons
+# (DESIGN.md §4).
+SKIPS = {
+    ("whisper-tiny", "long_500k"):
+        "enc-dec audio: source context <=1500 frames, decoder max 448; "
+        "524288-token decode context is architecturally meaningless",
+}
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCHS}
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "CompressionConfig",
+    "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "ARCHS", "SKIPS", "get_config", "all_configs",
+]

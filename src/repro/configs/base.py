@@ -1,0 +1,190 @@
+"""Config system for the repro framework.
+
+A single frozen ``ModelConfig`` dataclass covers all six architecture
+families assigned to this paper (dense, moe, vlm, ssm, hybrid, audio).
+Every architecture in ``src/repro/configs/<id>.py`` exports
+
+    CONFIG       -- the full production config (exact assigned numbers)
+    SMOKE_CONFIG -- a reduced variant of the same family (<=2 layers,
+                    d_model<=512, <=4 experts) used by CPU smoke tests.
+
+Input shapes live in ``shapes.py``; the registry in ``registry.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity ------------------------------------------------------------
+    name: str
+    family: str                      # dense | moe | vlm | ssm | hybrid | audio
+    source: str = ""                 # citation for the config numbers
+
+    # transformer core ------------------------------------------------------
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+    activation: str = "swiglu"       # swiglu | relu2 | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    tie_embeddings: bool = False
+
+    # positional ------------------------------------------------------------
+    rope_theta: float = 1.0e4
+    use_mrope: bool = False          # Qwen2-VL multimodal RoPE (3 sections)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w split of head_dim/2
+
+    # MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
+    first_k_dense_layers: int = 0    # deepseek: first k layers are dense
+    dense_residual: bool = False     # arctic: parallel dense MLP residual
+    router_aux_loss_coef: float = 1.0e-2
+
+    # MLA (DeepSeek-V3 multi-head latent attention) ----------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSM (Mamba2 / RWKV6) ------------------------------------------------
+    ssm_state_dim: int = 0
+    ssm_conv_dim: int = 4
+    ssm_head_dim: int = 64           # per-head channel width for SSD / RWKV6
+    ssm_expand: int = 2              # Mamba2 inner expansion
+
+    # hybrid (Zamba2): shared attention block every k SSM layers ----------
+    attn_layer_period: int = 0       # 0 -> no interleaved attention
+
+    # encoder-decoder (Whisper) -------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # precomputed frame embeddings length
+    decoder_max_seq: int = 0         # architectural decoder limit (doc only)
+
+    # multimodal frontend stub ---------------------------------------------
+    num_visual_tokens: int = 0       # patch embeds injected by input_specs()
+    projector: str = "mlp"           # mlp | perceiver (Flamingo resampler)
+    num_latents: int = 64            # perceiver: fixed visual-token budget
+
+    # long-context -----------------------------------------------------
+    sliding_window: int = 0          # 0 = full attention; >0 = ring-buffer window
+
+    # numerics --------------------------------------------------------------
+    dtype: str = "bfloat16"
+    logits_softcap: float = 0.0
+    weight_quant: str = "none"       # none | int8_ffn (serving: FFN weights
+    #                                  stored int8 + per-channel f32 scales;
+    #                                  halves fsdp gather bytes per step)
+
+    # ----------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # derived -----------------------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    @property
+    def kv_head_dim(self) -> int:
+        """Width of one KV entry per layer per token (for cache sizing)."""
+        if self.use_mla:
+            return self.kv_lora_rank + self.qk_rope_head_dim  # latent cache
+        return 2 * self.num_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Exact parameter count from the spec tree (filled by registry)."""
+        from repro.models.registry import build
+        specs = build(self).param_specs()
+        total = 0
+
+        def _walk(node):
+            nonlocal total
+            if isinstance(node, dict):
+                for v in node.values():
+                    _walk(v)
+            else:
+                n = 1
+                for s in node.shape:
+                    n *= s
+                total += n
+        _walk(specs)
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE discounts inactive experts)."""
+        total = self.param_count()
+        if not self.num_experts:
+            return total
+        from repro.models.registry import build
+        specs = build(self).param_specs()
+        expert_params = 0
+
+        def _walk(node, path=()):
+            nonlocal expert_params
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    _walk(v, path + (k,))
+            else:
+                if any("expert" in p for p in path) and "shared" not in "/".join(path):
+                    n = 1
+                    for s in node.shape:
+                        n *= s
+                    expert_params += n
+        _walk(specs)
+        if self.num_experts:
+            frac = self.experts_per_token / self.num_experts
+            total = total - expert_params + int(expert_params * frac)
+        return total
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Selects taxonomy-dimension-1/2 features for a serving run."""
+    # visual token compression (dim 1)
+    token_pruner: str = "none"       # none|fastv|sparsevlm|l2|divprune|cdpruner|pyramiddrop
+    token_merger: str = "none"       # none|tome|framefusion
+    keep_ratio: float = 1.0          # fraction of visual tokens kept
+    prune_layer: int = 2             # FastV: drop after this decoder layer
+    # KV cache (dim 2)
+    kv_selector: str = "none"        # none|snapkv|h2o|streaming|l2
+    kv_budget: int = 0               # tokens retained (0 = unlimited)
+    kv_budget_policy: str = "uniform"   # uniform|pyramid|adaptive
+    kv_merger: str = "none"          # none|d2o
+    # decoding (dim 4)
+    speculative: bool = False
+    draft_len: int = 4
+    early_exit_threshold: float = 0.0   # 0 = disabled

@@ -1,0 +1,6 @@
+from repro.core.decoding.sampling import (
+    sample_token, greedy, temperature_sample, top_k_sample, top_p_sample)
+from repro.core.decoding.speculative import (
+    SpecStats, speculative_generate, acceptance_rate)
+from repro.core.decoding.early_exit import (
+    early_exit_decode_step, layer_confidences)

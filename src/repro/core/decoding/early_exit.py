@@ -1,0 +1,140 @@
+"""Early exit / layer skipping (survey dim 4b): AdaInfer-style adaptive depth.
+
+The surveyed observation: "easy" tokens saturate early -- their logit-lens
+prediction stops changing after a fraction of the layers -- so a confidence
+classifier can terminate the decode pass early and save the remaining
+layers' FLOPs.
+
+AdaInfer trains an SVM on per-layer statistical features; here we implement
+the training-free confidence variant (logit-lens max-probability threshold)
+which is the common baseline in that line of work:
+
+    after layer l:  p_l = softmax(unembed(norm(h_l)));  exit if max p_l > tau
+    plus a stability criterion: argmax unchanged for ``patience`` layers.
+
+The decode step runs as a host-side Python loop over UNSTACKED layer params
+(the introspection path -- transformer.py's scanned path is for the
+production mesh), so the exit is a real break: layers after the exit are
+never executed. Returns per-token depth used, giving the FLOPs-saved metric
+the benchmarks report.
+
+Applicability (DESIGN §3): dense / vlm / moe decode paths. For SSM the notion
+of "skipping remaining layers" still applies but invalidates the recurrent
+state of skipped layers for FUTURE tokens -- the survey flags this as an open
+problem; we restrict to attention families where the KV cache of skipped
+layers can simply be back-filled with the layer input (identity skip).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import _dense_layer_decode
+
+
+def _slice_layer(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _set_layer(tree, i, sub):
+    return jax.tree.map(lambda a, s: a.at[i].set(s), tree, sub)
+
+
+def layer_confidences(model, params, cache, tokens, pos) -> jax.Array:
+    """Diagnostic: run ALL layers, return [num_layers] logit-lens max-prob."""
+    cfg = model.cfg
+    x = L.embed_tokens(params["embed"], tokens)
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (b,))
+    cos, sin = model._cos_sin(b, pos[:, None])
+    confs = []
+    n = cfg.num_layers - cfg.first_k_dense_layers \
+        if cfg.family == "moe" else cfg.num_layers
+    for i in range(n):
+        lp = _slice_layer(params["layers"], i)
+        lcache = _slice_layer(cache["layers"], i)
+        x, _ = _dense_layer_decode(cfg, lp, x, cos, sin, lcache, pos,
+                                   window=0)
+        h = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.unembed(params["embed"], h, cfg.logits_softcap)
+        confs.append(jnp.max(jax.nn.softmax(logits[:, 0], -1), -1))
+    return jnp.stack(confs)            # [L, B]
+
+
+def early_exit_decode_step(model, params, cache, tokens, pos, *,
+                           threshold: float = 0.9, patience: int = 2,
+                           min_layers: int = 2
+                           ) -> Tuple[jax.Array, Dict, Dict]:
+    """One decode step with confidence-based early exit.
+
+    Returns (logits [B,V], new_cache, info) where info['layers_used'] is the
+    actual depth executed (int) and info['exited'] whether the threshold
+    fired. Batch exits jointly (min confidence across batch), matching
+    AdaInfer's batched serving variant.
+    """
+    cfg = model.cfg
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError("early exit targets attention families")
+    if cfg.family == "moe" and cfg.first_k_dense_layers:
+        raise NotImplementedError("early exit w/ dense-prefix MoE unsupported")
+    x = L.embed_tokens(params["embed"], tokens)
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (b,))
+    cos, sin = model._cos_sin(b, pos[:, None])
+
+    new_layer_cache = cache["layers"]
+    n = cfg.num_layers
+    last_argmax = None
+    stable = 0
+    exited = False
+    logits = None
+    used = n
+    for i in range(n):
+        lp = _slice_layer(params["layers"], i)
+        lcache = _slice_layer(cache["layers"], i)
+        x, lcache = _dense_layer_decode(cfg, lp, x, cos, sin, lcache, pos,
+                                        window=0)
+        new_layer_cache = _set_layer(new_layer_cache, i, lcache)
+        if i + 1 < min_layers:
+            continue
+        h = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.unembed(params["embed"], h, cfg.logits_softcap)[:, 0]
+        probs = jax.nn.softmax(logits, -1)
+        conf = float(jnp.min(jnp.max(probs, -1)))
+        am = jnp.argmax(logits, -1)
+        if last_argmax is not None and bool(jnp.all(am == last_argmax)):
+            stable += 1
+        else:
+            stable = 0
+        last_argmax = am
+        if conf > threshold and stable >= patience:
+            used = i + 1
+            exited = True
+            break
+    if logits is None:                  # min_layers == n edge case
+        h = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.unembed(params["embed"], h, cfg.logits_softcap)[:, 0]
+
+    if exited:
+        # identity skip: back-fill skipped layers' KV with the exit hidden
+        # state so FUTURE tokens see a consistent cache (standard early-exit
+        # cache-propagation fix).
+        from repro.models import attention as attn
+        for i in range(used, n):
+            lp = _slice_layer(params["layers"], i)
+            lcache = _slice_layer(cache["layers"], i)
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            if cfg.use_mla:
+                _, lcache = attn.mla_decode_attention(
+                    lp["attn"], h, cos, sin, cfg, lcache, pos)
+            else:
+                _, lcache = attn.decode_attention(
+                    lp["attn"], h, cos, sin, cfg, lcache, pos)
+            new_layer_cache = _set_layer(new_layer_cache, i, lcache)
+
+    info = {"layers_used": used, "exited": exited,
+            "flops_frac": used / n}
+    return logits, dict(cache, layers=new_layer_cache), info

@@ -1,0 +1,72 @@
+"""Token sampling (decode substrate).
+
+Pure functions over logits [B, V]; all jit-friendly. ``sample_token`` is the
+single dispatch the engine and the speculative-decoding verifier share, so
+draft and target distributions are computed by the same code path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _mask_top_k(logits: jax.Array, k: int) -> jax.Array:
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < kth, -jnp.inf, logits)
+
+
+def _mask_top_p(logits: jax.Array, p: float) -> jax.Array:
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # smallest set whose mass >= p (always keep the argmax)
+    cutoff_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
+
+
+def temperature_sample(key, logits, temperature: float = 1.0) -> jax.Array:
+    return jax.random.categorical(key, logits / max(temperature, 1e-6)
+                                  ).astype(jnp.int32)
+
+
+def top_k_sample(key, logits, k: int, temperature: float = 1.0) -> jax.Array:
+    return temperature_sample(key, _mask_top_k(logits, k), temperature)
+
+
+def top_p_sample(key, logits, p: float, temperature: float = 1.0) -> jax.Array:
+    return temperature_sample(key, _mask_top_p(logits, p), temperature)
+
+
+def sample_probs(logits, *, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """The (post-warp) categorical the sampler draws from; used by the
+    speculative verifier, which needs explicit draft/target probabilities."""
+    if temperature <= 0.0:
+        onehot = jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1])
+        return onehot
+    l = logits / temperature
+    if top_k:
+        l = _mask_top_k(l, top_k)
+    if top_p:
+        l = _mask_top_p(l, top_p)
+    return jax.nn.softmax(l, axis=-1)
+
+
+def sample_token(key: Optional[jax.Array], logits, *, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """Dispatch: temperature<=0 -> greedy; else warped categorical."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    l = logits
+    if top_k:
+        l = _mask_top_k(l, top_k)
+    if top_p:
+        l = _mask_top_p(l, top_p)
+    return temperature_sample(key, l, temperature)

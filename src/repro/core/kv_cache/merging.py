@@ -1,0 +1,114 @@
+"""KV cache merging (survey dim 2a-iii): training-free intra-layer merging.
+
+  * d2o_merge   -- D2O: evicted keys/values are absorbed into their most
+                   similar retained entry when cosine similarity clears a
+                   threshold (otherwise truly discarded).
+  * chai_cluster-- CHAI: cluster attention heads whose attention patterns
+                   correlate; compute one representative head per cluster
+                   and share it (returns head->cluster map + reduced KV).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def d2o_merge(k, v, keep_idx, *, threshold: float = 0.5
+              ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """k,v [B,S,H,D]; keep_idx [B,Bud] sorted. Returns merged (k',v').
+
+    Evicted entries with cosine(sim to nearest kept key) >= threshold are
+    merged (mean) into that kept entry; others are dropped (true eviction).
+    """
+    b, s, h, d = k.shape
+    bud = keep_idx.shape[1]
+    kk = jnp.take_along_axis(k, keep_idx[:, :, None, None], 1)  # [B,Bud,H,D]
+    vv = jnp.take_along_axis(v, keep_idx[:, :, None, None], 1)
+
+    keep_mask = jnp.zeros((b, s), bool).at[
+        jnp.arange(b)[:, None], keep_idx].set(True)
+    kf = k.astype(jnp.float32)
+    kn = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-6)
+    kkn = jnp.take_along_axis(kn, keep_idx[:, :, None, None], 1)
+    # per-head similarity of every token to every kept token
+    sim = jnp.einsum("bshd,bthd->bhst", kn, kkn)            # [B,H,S,Bud]
+    best = sim.max(-1)                                      # [B,H,S]
+    dst = sim.argmax(-1)                                    # [B,H,S]
+    mergeable = (~keep_mask[:, None]) & (best >= threshold)
+
+    w = mergeable.astype(jnp.float32)
+    bidx = jnp.arange(b)[:, None, None]
+    hidx = jnp.arange(h)[None, :, None]
+    add_k = jnp.zeros((b, h, bud, d), jnp.float32)
+    add_v = jnp.zeros((b, h, bud, d), jnp.float32)
+    cnt = jnp.zeros((b, h, bud), jnp.float32)
+    kf_t = jnp.moveaxis(kf, 2, 1)                           # [B,H,S,D]
+    vf_t = jnp.moveaxis(v.astype(jnp.float32), 2, 1)
+    add_k = add_k.at[bidx, hidx, dst].add(kf_t * w[..., None])
+    add_v = add_v.at[bidx, hidx, dst].add(vf_t * w[..., None])
+    cnt = cnt.at[bidx, hidx, dst].add(w)
+
+    kk_t = jnp.moveaxis(kk.astype(jnp.float32), 2, 1)
+    vv_t = jnp.moveaxis(vv.astype(jnp.float32), 2, 1)
+    k_out = (kk_t + add_k) / (1.0 + cnt)[..., None]
+    v_out = (vv_t + add_v) / (1.0 + cnt)[..., None]
+    merged_frac = w.sum() / jnp.maximum((~keep_mask).sum() * h, 1)
+    return (jnp.moveaxis(k_out, 1, 2).astype(k.dtype),
+            jnp.moveaxis(v_out, 1, 2).astype(v.dtype),
+            {"merged_frac": merged_frac})
+
+
+def chai_cluster(attn, num_clusters: int) -> Tuple[np.ndarray, Dict]:
+    """CHAI: cluster heads by attention-pattern correlation (host-side).
+
+    attn [B,H,Sq,S] -> head_to_cluster [H] int; representative = first
+    member. Simple greedy agglomeration on the head-head correlation of
+    flattened attention maps (k-medoid-ish, deterministic).
+    """
+    import numpy as np
+    a = np.asarray(attn, np.float32)
+    h = a.shape[1]
+    flat = a.transpose(1, 0, 2, 3).reshape(h, -1)
+    flat = (flat - flat.mean(1, keepdims=True))
+    flat /= (np.linalg.norm(flat, axis=1, keepdims=True) + 1e-6)
+    corr = flat @ flat.T                                    # [H,H]
+
+    assignment = -np.ones(h, int)
+    reps = []
+    order = np.argsort(-corr.sum(1))                        # central heads first
+    for head in order:
+        if assignment[head] >= 0:
+            continue
+        if len(reps) < num_clusters:
+            reps.append(head)
+            assignment[head] = len(reps) - 1
+        else:
+            assignment[head] = int(np.argmax([corr[head, r] for r in reps]))
+    # assign leftovers (none expected, but safe)
+    for head in range(h):
+        if assignment[head] < 0:
+            assignment[head] = int(np.argmax([corr[head, r] for r in reps]))
+    within = float(np.mean([corr[i, reps[assignment[i]]] for i in range(h)]))
+    return assignment, {"reps": reps, "within_corr": within}
+
+
+def chai_shared_attention(q, k, v, assignment, reps):
+    """Compute attention only for representative heads, share across the
+    cluster. q,k,v [B,S,H,D] -> out [B,S,H,D]; softmax over full S."""
+    b, s, h, d = q.shape
+    reps = jnp.asarray(reps, jnp.int32)
+    assignment = jnp.asarray(assignment, jnp.int32)
+    qr = q[:, :, reps]                                      # [B,S,R,D]
+    kr = k[:, :, reps]
+    scores = jnp.einsum("bqrd,bkrd->brqk", qr.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / (d ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, -1)                          # [B,R,Sq,Sk]
+    p_full = p[:, assignment]                               # [B,H,Sq,Sk]
+    out = jnp.einsum("bhqk,bkhd->bqhd", p_full,
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)

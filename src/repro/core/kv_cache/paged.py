@@ -1,0 +1,135 @@
+"""Paged KV cache (survey dim 2b-i): vLLM's PagedAttention adapted to TPU.
+
+Host-side ``BlockAllocator`` manages a fixed pool of physical blocks with
+reference counting (copy-on-write sharing for prefix reuse). Device-side
+``PagedKVPool`` holds the preallocated physical pages; sequences address
+them through per-request block tables, exactly like vLLM's logical->physical
+mapping. The TPU adaptation (DESIGN.md §2): attention gathers whole PAGES
+(block_size a multiple of the lane width), not scattered tokens, so the
+lookup is DMA-friendly -- kernels/paged_attention.py makes the page the
+Pallas grid dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfBlocksError(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    """Reference-counted physical block pool (host-side control plane)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.free_list: List[int] = list(range(num_blocks))
+        self.ref: np.ndarray = np.zeros(num_blocks, np.int32)
+
+    # -- stats ------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free_list)
+
+    def utilization(self) -> float:
+        return 1.0 - self.num_free / self.num_blocks
+
+    # -- ops ---------------------------------------------------------------
+    def alloc(self) -> int:
+        if not self.free_list:
+            raise OutOfBlocksError("paged KV pool exhausted")
+        blk = self.free_list.pop()
+        self.ref[blk] = 1
+        return blk
+
+    def share(self, blk: int) -> int:
+        assert self.ref[blk] > 0
+        self.ref[blk] += 1
+        return blk
+
+    def free(self, blk: int) -> None:
+        assert self.ref[blk] > 0, f"double free of block {blk}"
+        self.ref[blk] -= 1
+        if self.ref[blk] == 0:
+            self.free_list.append(blk)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return (n_tokens + self.block_size - 1) // self.block_size
+
+
+@dataclasses.dataclass
+class SeqBlocks:
+    """Per-sequence logical->physical mapping."""
+    block_ids: List[int]
+    length: int = 0                    # tokens written
+
+    def capacity(self, block_size: int) -> int:
+        return len(self.block_ids) * block_size
+
+
+class PagedKVPool:
+    """Device-side paged pool for an L-layer attention model.
+
+    Layout: k/v [L, num_blocks, block_size, H_kv, D]. Page-major so one
+    (layer, block) pair is a contiguous DMA.
+    """
+
+    def __init__(self, num_layers: int, num_blocks: int, block_size: int,
+                 num_kv_heads: int, head_dim: int, dtype=jnp.float32):
+        shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.shape = shape
+        self.block_size = block_size
+
+    def write_prefill(self, seq: SeqBlocks, layer_k, layer_v):
+        """layer_k/v [L, S, H, D]: scatter a prompt's KV into its blocks."""
+        l, s, h, d = layer_k.shape
+        bs = self.block_size
+        nb = (s + bs - 1) // bs
+        assert nb <= len(seq.block_ids), (nb, len(seq.block_ids))
+        pad = nb * bs - s
+        if pad:
+            layer_k = jnp.pad(layer_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            layer_v = jnp.pad(layer_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kb = layer_k.reshape(l, nb, bs, h, d)
+        vb = layer_v.reshape(l, nb, bs, h, d)
+        ids = jnp.asarray(seq.block_ids[:nb], jnp.int32)
+        self.k = self.k.at[:, ids].set(kb)
+        self.v = self.v.at[:, ids].set(vb)
+        seq.length = s
+
+    def append_token(self, seq: SeqBlocks, k_t, v_t):
+        """k_t/v_t [L, H, D]: append one token's KV."""
+        pos = seq.length
+        blk = seq.block_ids[pos // self.block_size]
+        off = pos % self.block_size
+        self.k = self.k.at[:, blk, off].set(k_t)
+        self.v = self.v.at[:, blk, off].set(v_t)
+        seq.length += 1
+
+    def gather(self, seq: SeqBlocks, layer: int):
+        """Reference gather of one sequence's KV: ([S,H,D], [S,H,D])."""
+        ids = jnp.asarray(seq.block_ids, jnp.int32)
+        k = self.k[layer, ids].reshape(-1, *self.shape[3:])[:seq.length]
+        v = self.v[layer, ids].reshape(-1, *self.shape[3:])[:seq.length]
+        return k, v
+
+
+def fragmentation_waste(seqs: List[SeqBlocks], block_size: int) -> Dict:
+    """Internal fragmentation stats: bytes reserved but unused.
+
+    The survey's motivation for PagedAttention: contiguous preallocation
+    wastes (max_len - len) per sequence; paging wastes < block_size.
+    """
+    internal = sum(len(s.block_ids) * block_size - s.length for s in seqs)
+    used = sum(s.length for s in seqs)
+    return {"internal_slots_wasted": internal,
+            "used_slots": used,
+            "waste_frac": internal / max(1, internal + used)}

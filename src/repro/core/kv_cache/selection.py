@@ -1,0 +1,118 @@
+"""KV cache selection (survey dim 2a-i): static + dynamic token retention.
+
+Uniform signature over a single layer's cache:
+
+    select(k, v, *, budget, attn=None, pos=None)
+        k, v  : [B, S, H, D]
+        attn  : [B, Hq, Sq, S] attention probs (observation window or
+                accumulated), required by attention-based selectors
+        pos   : [S] absolute positions (default arange)
+        -> (k' [B,budget,H,D], v' [B,budget,H,D], kept_pos [B,budget])
+
+  * snapkv     -- observation-window voting, static one-shot post-prefill
+  * h2o        -- heavy hitters (accumulated attention) + recent window
+  * streaming  -- attention sinks + recent window (position-only)
+  * l2         -- low key-L2-norm retention (attention-free)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Out = Tuple[jax.Array, jax.Array, jax.Array]
+
+
+def _gather(k, v, idx):
+    """idx [B, budget] -> gathered caches."""
+    k2 = jnp.take_along_axis(k, idx[:, :, None, None], axis=1)
+    v2 = jnp.take_along_axis(v, idx[:, :, None, None], axis=1)
+    return k2, v2
+
+
+def _finish(k, v, scores, budget, pos) -> Out:
+    _, idx = jax.lax.top_k(scores, budget)
+    idx = jnp.sort(idx, axis=-1)
+    k2, v2 = _gather(k, v, idx)
+    kept_pos = jnp.take_along_axis(
+        jnp.broadcast_to(pos[None], scores.shape), idx, axis=1)
+    return k2, v2, kept_pos
+
+
+def _default_pos(s):
+    return jnp.arange(s, dtype=jnp.int32)
+
+
+def select_snapkv(k, v, *, budget, attn, pos=None, obs_window: int = 16,
+                  kernel: int = 5) -> Out:
+    """SnapKV: votes from the last ``obs_window`` queries, pooled.
+
+    attn [B,Hq,Sq,S]: full-prompt attention; only the final observation
+    window's rows vote. 1D pooling smooths the votes so adjacent context
+    survives together (as in the paper). The observation window itself is
+    always retained (forced +inf score).
+    """
+    b, s = k.shape[0], k.shape[1]
+    pos = _default_pos(s) if pos is None else pos
+    votes = attn[:, :, -obs_window:, :].sum(axis=(1, 2))     # [B,S]
+    # avg-pool1d smoothing
+    pad = kernel // 2
+    vp = jnp.pad(votes, ((0, 0), (pad, pad)), mode="edge")
+    votes = jnp.stack([vp[:, i:i + s] for i in range(kernel)], 0).mean(0)
+    votes = votes.at[:, -obs_window:].set(jnp.inf)
+    return _finish(k, v, votes, budget, pos)
+
+
+def select_h2o(k, v, *, budget, attn, pos=None, recent_frac: float = 0.5
+               ) -> Out:
+    """H2O: heavy hitters by accumulated attention + recent window.
+
+    Half the budget (recent_frac) is the most recent tokens; the rest are
+    the highest accumulated-attention "heavy hitters".
+    """
+    b, s = k.shape[0], k.shape[1]
+    pos = _default_pos(s) if pos is None else pos
+    acc = attn.sum(axis=(1, 2))                              # [B,S]
+    n_recent = max(1, int(budget * recent_frac))
+    scores = acc.at[:, -n_recent:].set(jnp.inf)
+    return _finish(k, v, scores, budget, pos)
+
+
+def select_streaming(k, v, *, budget, attn=None, pos=None, sinks: int = 4
+                     ) -> Out:
+    """StreamingLLM: attention sinks (first ``sinks`` tokens) + recent.
+
+    Purely positional -- no attention needed; the sink retention encodes
+    the paper's "attention sink" stability phenomenon.
+    """
+    b, s = k.shape[0], k.shape[1]
+    pos = _default_pos(s) if pos is None else pos
+    rank = jnp.arange(s, dtype=jnp.float32)
+    scores = rank[None, :] * jnp.ones((b, 1))                # recency
+    scores = scores.at[:, :sinks].set(jnp.inf)               # sinks forced
+    return _finish(k, v, scores, budget, pos)
+
+
+def select_l2(k, v, *, budget, attn=None, pos=None) -> Out:
+    """L2Compress: low key-norm ~ high attention (static, attention-free)."""
+    b, s = k.shape[0], k.shape[1]
+    pos = _default_pos(s) if pos is None else pos
+    norms = jnp.linalg.norm(k.astype(jnp.float32), axis=-1).mean(-1)  # [B,S]
+    return _finish(k, v, -norms, budget, pos)
+
+
+SELECTORS = {
+    "snapkv": select_snapkv,
+    "h2o": select_h2o,
+    "streaming": select_streaming,
+    "l2": select_l2,
+}
+
+
+def oracle_topk(attn_future, budget) -> jax.Array:
+    """Oracle: positions that actually receive the most future attention.
+    Used by benchmarks to score selector recall. attn_future [B,Hq,Sq,S]."""
+    sc = attn_future.sum(axis=(1, 2))
+    _, idx = jax.lax.top_k(sc, budget)
+    return jnp.sort(idx, -1)

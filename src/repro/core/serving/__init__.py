@@ -1,0 +1,8 @@
+from repro.core.serving.request import Request, SLO, State, summarize
+from repro.core.serving.scheduler import (
+    SCHEDULERS, IterationPlan, StaticBatcher, ContinuousBatcher,
+    MLFQScheduler, ChunkedPrefillScheduler)
+from repro.core.serving.disaggregation import (
+    CostModel, PoolConfig, simulate_disaggregated, simulate_colocated,
+    goodput)
+from repro.core.serving.engine import Engine, EngineConfig

@@ -1,0 +1,94 @@
+"""Request lifecycle for the LVLM serving layer (survey dim 2c)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"          # (possibly chunked) prompt processing
+    DECODE = "decode"
+    PREEMPTED = "preempted"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class SLO:
+    ttft_ms: float = 500.0       # time-to-first-token target
+    tpot_ms: float = 50.0        # time-per-output-token target
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]                       # prompt token ids
+    max_new_tokens: int = 32
+    visual_embeds: Optional[np.ndarray] = None   # [Nv, d] stub patches
+    arrival: float = 0.0
+    slo: SLO = dataclasses.field(default_factory=SLO)
+
+    # runtime state ---------------------------------------------------------
+    state: State = State.WAITING
+    prefill_done: int = 0                   # tokens of prompt processed
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # scheduling metadata
+    priority: int = 0                        # MLFQ level
+    served_tokens: int = 0
+    predicted_len: Optional[int] = None      # ShuffleInfer-style estimate
+
+    @property
+    def prompt_len(self) -> int:
+        nv = 0 if self.visual_embeds is None else len(self.visual_embeds)
+        return len(self.tokens) + nv
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
+    def is_finished(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    # metrics ----------------------------------------------------------------
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def jct(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None \
+                or len(self.generated) <= 1:
+            return None
+        return ((self.finish_time - self.first_token_time)
+                / (len(self.generated) - 1))
+
+
+def summarize(reqs: List[Request]) -> Dict:
+    done = [r for r in reqs if r.finish_time is not None]
+    if not done:
+        return {"finished": 0}
+    ttfts = [r.ttft() for r in done if r.ttft() is not None]
+    jcts = [r.jct() for r in done]
+    tpots = [r.tpot() for r in done if r.tpot() is not None]
+    tokens = sum(len(r.generated) for r in done)
+    makespan = max(r.finish_time for r in done) - min(r.arrival for r in done)
+    return {
+        "finished": len(done),
+        "tokens": tokens,
+        "throughput_tok_per_s": tokens / max(makespan, 1e-9),
+        "ttft_mean": float(np.mean(ttfts)) if ttfts else None,
+        "ttft_p99": float(np.percentile(ttfts, 99)) if ttfts else None,
+        "jct_mean": float(np.mean(jcts)),
+        "tpot_mean": float(np.mean(tpots)) if tpots else None,
+        "makespan": makespan,
+    }

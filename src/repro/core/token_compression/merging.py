@@ -1,0 +1,114 @@
+"""Visual token merging (survey dim 1a-b).
+
+  * tome_merge        -- ToMe bipartite soft matching (r tokens per pass)
+  * prune_then_merge  -- PuMer/ASAP/VisPruner hybrid: prune uninformative,
+                         then consolidate survivors onto their nearest kept
+                         neighbour (weighted average).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tome_merge(embeds, r: int, *, sizes=None) -> Tuple[jax.Array, jax.Array, Dict]:
+    """ToMe bipartite soft matching: merge ``r`` tokens into their best match.
+
+    Tokens are split alternating (A = even, B = odd); each A token proposes
+    its most similar B token; the ``r`` highest-similarity edges merge
+    (size-weighted average), shrinking N by r. ``sizes`` tracks how many
+    original tokens each current token represents (for correct averaging
+    across repeated passes).
+
+    Returns (merged [B, N-r, d], new_sizes [B, N-r], info).
+    """
+    b, n, d = embeds.shape
+    na = (n + 1) // 2
+    nb = n // 2
+    assert 0 < r <= min(na, nb) - 0, (r, n)
+    if sizes is None:
+        sizes = jnp.ones((b, n), jnp.float32)
+
+    x = embeds.astype(jnp.float32)
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-6)
+    a, bt = xn[:, 0::2], xn[:, 1::2]
+    ae, be = x[:, 0::2], x[:, 1::2]
+    sa, sb = sizes[:, 0::2], sizes[:, 1::2]
+
+    sim = jnp.einsum("bad,bcd->bac", a, bt)                 # [B,na,nb]
+    best_sim = sim.max(-1)                                  # [B,na]
+    best_dst = sim.argmax(-1)                               # [B,na]
+
+    # pick r A-tokens with the highest best-similarity to merge away
+    _, merge_src = jax.lax.top_k(best_sim, r)               # [B,r]
+    merge_mask = jnp.zeros((b, na), bool)
+    merge_mask = merge_mask.at[jnp.arange(b)[:, None], merge_src].set(True)
+
+    # scatter-add merged A tokens into their B destinations (size-weighted)
+    w_src = jnp.where(merge_mask, sa, 0.0)                  # [B,na]
+    add_val = jnp.zeros_like(be)
+    add_size = jnp.zeros_like(sb)
+    bidx = jnp.arange(b)[:, None]
+    add_val = add_val.at[bidx, best_dst].add(ae * w_src[..., None])
+    add_size = add_size.at[bidx, best_dst].add(w_src)
+    new_b = (be * sb[..., None] + add_val) / (sb + add_size + 1e-9)[..., None]
+    new_sb = sb + add_size
+
+    # keep the unmerged A tokens (fixed count na - r via top_k on neg mask)
+    keep_score = jnp.where(merge_mask, -1.0, 1.0) * (
+        1.0 + jnp.arange(na, dtype=jnp.float32)[None] * 1e-6)
+    _, keep_idx = jax.lax.top_k(keep_score, na - r)
+    keep_idx = jnp.sort(keep_idx, -1)
+    kept_a = jnp.take_along_axis(ae, keep_idx[..., None], 1)
+    kept_sa = jnp.take_along_axis(sa, keep_idx, 1)
+
+    merged = jnp.concatenate([kept_a, new_b], 1).astype(embeds.dtype)
+    new_sizes = jnp.concatenate([kept_sa, new_sb], 1)
+    return merged, new_sizes, {"merged": r}
+
+
+def tome_to_count(embeds, keep: int, *, max_r_ratio: float = 0.4):
+    """Repeated ToMe passes until only ``keep`` tokens remain."""
+    sizes = None
+    x = embeds
+    while x.shape[1] > keep:
+        n = x.shape[1]
+        r = min(n - keep, max(1, int((n // 2) * max_r_ratio)))
+        x, sizes, _ = tome_merge(x, r, sizes=sizes)
+    return x, sizes
+
+
+def prune_then_merge(embeds, keep: int, *, scores=None
+                     ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """PuMer/FrameFusion-style hybrid.
+
+    1) rank tokens (by ``scores`` or L2 proxy), keep the top ``keep``;
+    2) each dropped token is absorbed into its most similar kept token
+       (weighted mean), so information is consolidated, not discarded.
+    """
+    b, n, d = embeds.shape
+    if scores is None:
+        scores = -jnp.linalg.norm(embeds.astype(jnp.float32), axis=-1)
+    _, kidx = jax.lax.top_k(scores, keep)
+    kidx = jnp.sort(kidx, -1)
+    kept = jnp.take_along_axis(embeds, kidx[..., None], 1)
+
+    keep_mask = jnp.zeros((b, n), bool).at[
+        jnp.arange(b)[:, None], kidx].set(True)
+    x = embeds.astype(jnp.float32)
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-6)
+    kn = jnp.take_along_axis(xn, kidx[..., None], 1)
+    sim = jnp.einsum("bnd,bkd->bnk", xn, kn)
+    dst = sim.argmax(-1)                                    # [B,N]
+
+    w = jnp.where(keep_mask, 0.0, 1.0)
+    add = jnp.zeros((b, keep, d), jnp.float32)
+    cnt = jnp.zeros((b, keep), jnp.float32)
+    bidx = jnp.arange(b)[:, None]
+    add = add.at[bidx, dst].add(x * w[..., None])
+    cnt = cnt.at[bidx, dst].add(w)
+    merged = ((kept.astype(jnp.float32) + add) / (1.0 + cnt)[..., None]
+              ).astype(embeds.dtype)
+    return merged, kidx.astype(jnp.int32), {"absorbed": int(n - keep)}

@@ -1,0 +1,54 @@
+"""Compression policy: maps CompressionConfig -> a callable applied to the
+visual token stream before (encoder-side) or inside (decoder-side) the
+backbone. This is the single integration point the serving engine and the
+examples use."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CompressionConfig
+from repro.core.token_compression import merging, pruning
+
+
+def compress_visual_tokens(cc: CompressionConfig, embeds, *,
+                           query=None, scores=None
+                           ) -> Tuple[jax.Array, Optional[jax.Array], Dict]:
+    """Apply the configured encoder-side compressor.
+
+    embeds [B,N,d]; query [B,Q,d] (text embeddings) for cross-modal
+    pruners; scores [B,N] externally computed salience (e.g. encoder
+    attention for PruMerge/VisionZip-style reduction).
+
+    Returns (compressed, kept_idx or None, info).
+    """
+    n = embeds.shape[1]
+    keep = max(1, int(round(n * cc.keep_ratio)))
+    if cc.keep_ratio >= 1.0 and cc.token_merger == "none":
+        return embeds, None, {"keep": n, "method": "none"}
+
+    if cc.token_merger == "tome":
+        out, sizes = merging.tome_to_count(embeds, keep)
+        return out, None, {"keep": out.shape[1], "method": "tome"}
+    if cc.token_merger == "framefusion":
+        out, idx, info = merging.prune_then_merge(embeds, keep, scores=scores)
+        return out, idx, {"method": "prune+merge", **info}
+
+    if cc.token_pruner == "none":
+        return embeds, None, {"keep": n, "method": "none"}
+    fn = pruning.PRUNERS[cc.token_pruner]
+    out, idx, info = fn(embeds, keep, scores=scores, query=query)
+    return out, idx, {"keep": keep, "method": cc.token_pruner, **info}
+
+
+def fastv_scores_from_attention(attn_probs, visual_slice) -> jax.Array:
+    """FastV salience from a decoder layer's attention probabilities.
+
+    attn_probs [B, H, Sq, Sk]; visual_slice = (start, stop) of the visual
+    tokens inside the key axis. Score = mean over heads and queries of the
+    attention each visual key receives.
+    """
+    start, stop = visual_slice
+    return attn_probs[..., start:stop].mean(axis=(1, 2))

@@ -1,0 +1,184 @@
+"""Visual token pruning (survey dim 1a).
+
+All pruners share one signature:
+
+    prune(embeds, keep, *, scores=None, query=None, key=None)
+        embeds : [B, N, d]  visual token embeddings
+        keep   : int        number of tokens to retain
+        -> (kept_embeds [B, keep, d], kept_idx [B, keep] int32, info dict)
+
+``kept_idx`` is always sorted ascending so downstream positional encodings
+stay monotone (the survey's §V RoPE-decay caveat).
+
+Implemented (each cites its surveyed source):
+  * fastv        -- attention-score pruning after layer k [FastV]
+  * sparsevlm    -- query-conditioned cross-modal relevance [SparseVLM/TRIM]
+  * l2           -- low L2-norm keys ~ high attention proxy [L2Compress];
+                    attention-free, applicable to SSM backbones (DESIGN §3)
+  * divprune     -- Max-Min Diversity Problem greedy 2-approximation [DivPrune]
+  * cdpruner     -- conditional-diversity DPP greedy MAP [CDPruner]
+  * pyramiddrop  -- progressive multi-stage schedule helper [PyramidDrop]
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Out = Tuple[jax.Array, jax.Array, Dict]
+
+
+def _take(embeds, idx):
+    return jnp.take_along_axis(embeds, idx[..., None], axis=1)
+
+
+def _topk_sorted(scores, keep) -> jax.Array:
+    """Top-``keep`` indices, returned in ascending positional order."""
+    _, idx = jax.lax.top_k(scores, keep)
+    return jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+
+def prune_fastv(embeds, keep, *, scores, **_) -> Out:
+    """FastV: keep visual tokens with highest received attention.
+
+    ``scores`` [B, N]: mean attention each visual token receives from all
+    queries at the pruning layer (layer 2 in the paper). Task-agnostic --
+    its failure mode on fine-grained prompts is what SparseVLM fixes.
+    """
+    idx = _topk_sorted(scores, keep)
+    return _take(embeds, idx), idx, {"criterion": "attn"}
+
+
+def prune_sparsevlm(embeds, keep, *, query, **_) -> Out:
+    """SparseVLM/TRIM: rank by relevance to the user query.
+
+    ``query`` [B, Q, d] text-token embeddings; relevance = max cosine
+    similarity of each visual token to any query token.
+    """
+    v = embeds / (jnp.linalg.norm(embeds, axis=-1, keepdims=True) + 1e-6)
+    q = query / (jnp.linalg.norm(query, axis=-1, keepdims=True) + 1e-6)
+    rel = jnp.einsum("bnd,bqd->bnq", v, q).max(-1)          # [B,N]
+    idx = _topk_sorted(rel, keep)
+    return _take(embeds, idx), idx, {"criterion": "query-relevance"}
+
+
+def prune_l2(embeds, keep, *, key=None, **_) -> Out:
+    """L2Compress: low key-norm correlates with high attention.
+
+    Works on key embeddings when provided, else on the token embeddings --
+    an attention-FREE salience proxy (survey §V open problem), hence the
+    pruner of record for SSM backbones.
+    """
+    target = key if key is not None else embeds
+    norms = jnp.linalg.norm(target.astype(jnp.float32), axis=-1)
+    idx = _topk_sorted(-norms, keep)                        # low norm = keep
+    return _take(embeds, idx), idx, {"criterion": "l2"}
+
+
+def prune_divprune(embeds, keep, **_) -> Out:
+    """DivPrune: greedy Max-Min-Diversity (2-approx of MMDP).
+
+    Iteratively adds the token whose minimum distance to the selected set
+    is largest; drops duplicate textures (sky/wall) regardless of salience.
+    """
+    b, n, d = embeds.shape
+    x = embeds.astype(jnp.float32)
+    x = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-6)
+    sim = jnp.einsum("bnd,bmd->bnm", x, x)                  # cosine sim
+    dist = 1.0 - sim                                        # [B,N,N]
+
+    def body(carry, _):
+        min_dist, selected_mask = carry
+        cand = jnp.where(selected_mask, -jnp.inf, min_dist)
+        nxt = jnp.argmax(cand, axis=-1)                     # [B]
+        selected_mask = selected_mask.at[jnp.arange(b), nxt].set(True)
+        min_dist = jnp.minimum(min_dist,
+                               dist[jnp.arange(b), nxt])    # [B,N]
+        return (min_dist, selected_mask), nxt
+
+    # seed with token 0 (deterministic)
+    sel0 = jnp.zeros((b, n), bool).at[:, 0].set(True)
+    (_, mask), picks = jax.lax.scan(
+        body, (dist[:, 0], sel0), None, length=keep - 1)
+    idx_unsorted = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32), jnp.moveaxis(picks, 0, 1)], axis=1)
+    idx = jnp.sort(idx_unsorted, axis=-1).astype(jnp.int32)
+    return _take(embeds, idx), idx, {"criterion": "max-min-diversity"}
+
+
+def prune_cdpruner(embeds, keep, *, query=None, **_) -> Out:
+    """CDPruner: greedy MAP of a (conditional) DPP.
+
+    Kernel L = diag(q) * S * diag(q): S = cosine similarity, q = relevance
+    to the instruction (uniform when no query). Greedy MAP via Cholesky-
+    style update selects a set that is jointly diverse AND relevant.
+    """
+    b, n, d = embeds.shape
+    x = embeds.astype(jnp.float32)
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-6)
+    s = jnp.einsum("bnd,bmd->bnm", xn, xn)
+    if query is not None:
+        qn = query / (jnp.linalg.norm(query, axis=-1, keepdims=True) + 1e-6)
+        rel = (jnp.einsum("bnd,bqd->bnq", xn, qn).max(-1) + 1.0) / 2.0
+    else:
+        rel = jnp.ones((b, n), jnp.float32)
+    l_kern = rel[:, :, None] * s * rel[:, None, :]
+
+    # greedy DPP MAP (incremental marginal-gain, O(keep * N) per batch)
+    def body(carry, _):
+        di2, cis, selected_mask, step = carry
+        gain = jnp.where(selected_mask, -jnp.inf, jnp.log(di2 + 1e-12))
+        j = jnp.argmax(gain, axis=-1)                        # [B]
+        bidx = jnp.arange(b)
+        dj = jnp.sqrt(di2[bidx, j] + 1e-12)                  # [B]
+        # e_i = (L[j,i] - <c_j, c_i>) / d_j
+        lji = l_kern[bidx, j]                                # [B,N]
+        cj = cis[:, :, :]                                    # [B,K,N]
+        cjj = jnp.take_along_axis(cj, j[:, None, None], axis=2)[..., 0]
+        e = (lji - jnp.einsum("bkn,bk->bn", cj, cjj)) / dj[:, None]
+        cis = cis.at[:, step, :].set(e)
+        di2 = jnp.maximum(di2 - jnp.square(e), 0.0)
+        selected_mask = selected_mask.at[bidx, j].set(True)
+        return (di2, cis, selected_mask, step + 1), j
+
+    di2_0 = jnp.einsum("bnn->bn", l_kern)
+    cis0 = jnp.zeros((b, keep, n), jnp.float32)
+    sel0 = jnp.zeros((b, n), bool)
+    (_, _, _, _), picks = jax.lax.scan(
+        body, (di2_0, cis0, sel0, 0), None, length=keep)
+    idx = jnp.sort(jnp.moveaxis(picks, 0, 1), axis=-1).astype(jnp.int32)
+    return _take(embeds, idx), idx, {"criterion": "conditional-dpp"}
+
+
+# --------------------------------------------------------------------------
+
+def pyramiddrop_schedule(n_tokens: int, num_layers: int, stages: int = 4,
+                         final_keep_ratio: float = 0.125):
+    """PyramidDrop: per-stage (layer, keep) schedule.
+
+    Returns [(layer_idx, n_keep), ...] dropping progressively: rather than
+    FastV's single aggressive drop, tokens shrink geometrically across
+    ``stages`` evenly spaced depths.
+    """
+    import math
+    out = []
+    ratio = final_keep_ratio ** (1.0 / stages)
+    keep = n_tokens
+    for s in range(stages):
+        layer = max(1, (s + 1) * num_layers // (stages + 1))
+        keep = max(1, int(math.ceil(keep * ratio)))
+        out.append((layer, keep))
+    return out
+
+
+PRUNERS = {
+    "fastv": prune_fastv,
+    "sparsevlm": prune_sparsevlm,
+    "l2": prune_l2,
+    "divprune": prune_divprune,
+    "cdpruner": prune_cdpruner,
+}

@@ -1,0 +1,139 @@
+"""Video token compression (survey dim 1-2): spatiotemporal merging and
+dynamic, multi-granular, task-aware compression.
+
+Inputs are frame-patch embeddings [B, F, P, d] (F frames, P patches/frame)
+from the stubbed frontend.
+
+  * temporal_merge     -- Chat-UniVi/HoliTom-style: cluster temporally
+                          adjacent similar frames, average their patches.
+  * llama_vid_compress -- LLaMA-VID: 2 tokens per frame (context + content).
+  * dycoke_ratio       -- DyCoke: per-window dynamic compression ratio from
+                          frame-difference complexity.
+  * dynamic_compress   -- dynamic pipeline: complexity-adaptive per-frame
+                          patch budgets (Dynamic-VLM / FastVID flavor).
+  * framefusion        -- similarity-then-importance prune+merge across the
+                          flattened spatiotemporal token stream.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.token_compression.merging import prune_then_merge
+
+
+def _frame_feats(video):
+    """[B,F,P,d] -> normalized per-frame mean feature [B,F,d] (f32)."""
+    f = video.astype(jnp.float32).mean(2)
+    return f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-6)
+
+
+def frame_similarity(video) -> jax.Array:
+    """Cosine similarity between consecutive frames: [B, F-1]."""
+    f = _frame_feats(video)
+    return jnp.einsum("bfd,bfd->bf", f[:, :-1], f[:, 1:])
+
+
+def temporal_merge(video, num_segments: int) -> Tuple[jax.Array, Dict]:
+    """Merge F frames into ``num_segments`` contiguous segments.
+
+    Segment boundaries are placed at the ``num_segments-1`` LOWEST
+    consecutive-frame similarities (scene changes), then patches are
+    averaged within each segment -- the global-optimization view of
+    HoliTom vs. fixed-stride pooling.
+
+    Returns ([B, num_segments, P, d], info).
+    """
+    b, f, p, d = video.shape
+    sim = frame_similarity(video)                           # [B,F-1]
+    k = num_segments - 1
+    _, cut_idx = jax.lax.top_k(-sim, k)                     # lowest sim
+    # boundary mask: frame i starts a new segment if cut at i-1
+    starts = jnp.zeros((b, f), jnp.int32).at[
+        jnp.arange(b)[:, None], cut_idx + 1].set(1)
+    starts = starts.at[:, 0].set(1)
+    seg_id = jnp.cumsum(starts, axis=1) - 1                 # [B,F] in [0,S)
+
+    seg_sum = jnp.zeros((b, num_segments, p, d), jnp.float32)
+    seg_cnt = jnp.zeros((b, num_segments), jnp.float32)
+    bidx = jnp.arange(b)[:, None]
+    seg_sum = seg_sum.at[bidx, seg_id].add(video.astype(jnp.float32))
+    seg_cnt = seg_cnt.at[bidx, seg_id].add(1.0)
+    out = seg_sum / seg_cnt[..., None, None]
+    return out.astype(video.dtype), {"segments": num_segments}
+
+
+def llama_vid_compress(video, query=None) -> Tuple[jax.Array, Dict]:
+    """LLaMA-VID: each frame -> [context token, content token].
+
+    context token = query-conditioned attention pool over patches (mean
+    pool without query); content token = plain mean pool. Output
+    [B, F*2, d].
+    """
+    b, f, p, d = video.shape
+    x = video.astype(jnp.float32)
+    content = x.mean(2)                                     # [B,F,d]
+    if query is not None:
+        q = query.astype(jnp.float32).mean(1)               # [B,d]
+        att = jax.nn.softmax(
+            jnp.einsum("bd,bfpd->bfp", q, x) / (d ** 0.5), -1)
+        context = jnp.einsum("bfp,bfpd->bfd", att, x)
+    else:
+        context = content
+    out = jnp.stack([context, content], 2).reshape(b, f * 2, d)
+    return out.astype(video.dtype), {"tokens_per_frame": 2}
+
+
+def dycoke_ratio(video, *, min_ratio=0.1, max_ratio=1.0) -> jax.Array:
+    """DyCoke: dynamic per-frame keep ratio from temporal complexity.
+
+    Static scenes (high consecutive similarity) compress hard; motion
+    keeps more. Returns keep ratio per frame [B, F] in [min, max].
+    """
+    sim = frame_similarity(video)                           # [B,F-1]
+    complexity = 1.0 - sim
+    complexity = jnp.concatenate(
+        [complexity[:, :1], complexity], 1)                 # [B,F]
+    # ABSOLUTE complexity (clipped), not per-video max-normalized: a fully
+    # static video must compress hard everywhere, not keep its "most
+    # complex" frame at max_ratio (bug caught by examples/stream_video.py)
+    c = jnp.clip(complexity, 0.0, 1.0)
+    return min_ratio + (max_ratio - min_ratio) * c
+
+
+def dynamic_compress(video, token_budget: int) -> Tuple[jax.Array, Dict]:
+    """Complexity-adaptive compression to a fixed total ``token_budget``.
+
+    Per-frame budgets proportional to DyCoke complexity; within each frame
+    the top-|budget_f| patches by distance-from-frame-mean are kept (static
+    background drops first). Fixed output shape [B, token_budget, d]
+    (XLA-friendly): frames are ranked patch-wise, then a global top-k over
+    weighted saliency picks exactly ``token_budget`` tokens.
+    """
+    b, f, p, d = video.shape
+    x = video.astype(jnp.float32)
+    ratios = dycoke_ratio(video)                            # [B,F]
+    mean = x.mean(2, keepdims=True)
+    sal = jnp.linalg.norm(x - mean, axis=-1)                # [B,F,P]
+    sal = sal / (sal.max(-1, keepdims=True) + 1e-6)
+    weighted = (sal * ratios[..., None]).reshape(b, f * p)
+    _, idx = jax.lax.top_k(weighted, token_budget)
+    idx = jnp.sort(idx, -1)
+    flat = x.reshape(b, f * p, d)
+    out = jnp.take_along_axis(flat, idx[..., None], 1)
+    return out.astype(video.dtype), {"budget": token_budget,
+                                     "ratios_mean": ratios.mean()}
+
+
+def framefusion(video, keep: int) -> Tuple[jax.Array, Dict]:
+    """FrameFusion: merge near-duplicate spatiotemporal tokens, prune the
+    unimportant remainder, down to ``keep`` tokens."""
+    b, f, p, d = video.shape
+    flat = video.reshape(b, f * p, d)
+    x = flat.astype(jnp.float32)
+    mean = x.mean(1, keepdims=True)
+    importance = jnp.linalg.norm(x - mean, axis=-1)         # distance = info
+    merged, idx, info = prune_then_merge(flat, keep, scores=importance)
+    return merged, {"keep": keep, **info}

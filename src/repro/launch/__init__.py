@@ -1,0 +1,2 @@
+# launchers: mesh.py (production meshes), dryrun.py (lower+compile grid),
+# train.py / serve.py CLI drivers.

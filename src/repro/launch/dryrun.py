@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on the
+production meshes, with NO device allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # full grid
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+        --shape decode_32k --multi-pod                           # one pair
+
+Per pair it records compile success, ``memory_analysis()`` (fits-in-HBM
+proof), ``cost_analysis()`` FLOPs/bytes, and the parsed collective schedule
+-- the inputs to EXPERIMENTS.md §Dry-run and §Roofline. Results stream into
+experiments/dryrun_<mesh>.json so partial runs resume.
+
+The XLA_FLAGS line above MUST run before any other import: jax locks the
+device count at first init, and the 16x16 / 2x16x16 meshes need 512 host
+placeholder devices. Smoke tests and benchmarks never import this module.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SKIPS
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.roofline.analysis import roofline_from_compiled
+from repro.roofline.analytic import bytes_estimate, flops_estimate
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments")
+
+
+def run_pair(arch: str, shape: str, mesh, *, chips: int, fsdp: bool = True,
+             weight_stationary: bool = True, verbose: bool = True) -> dict:
+    t0 = time.time()
+    spec = build_step(arch, shape, mesh, fsdp=fsdp,
+                      decode_batch_replicated=weight_stationary)
+    if spec is None:
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": SKIPS[(arch, shape)]}
+    try:
+        with mesh:
+            jitted = jax.jit(spec.step,
+                             in_shardings=spec.in_shardings,
+                             out_shardings=spec.out_shardings,
+                             donate_argnums=spec.donate_argnums)
+            lowered = jitted.lower(*spec.args)
+            compiled = lowered.compile()
+        mf = flops_estimate(spec.model_cfg, spec.shape_cfg)
+        ab = bytes_estimate(spec.model_cfg, spec.shape_cfg)
+        rep = roofline_from_compiled(spec.name, compiled, chips=chips,
+                                     model_flops=mf, analytic_bytes=ab)
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            mem = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_bytes": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+            }
+        except Exception as e:           # CPU backend may not implement it
+            mem = {"error": str(e)}
+        out = {"arch": arch, "shape": shape, "status": "ok",
+               "step": spec.name.split("/")[-1],
+               "compile_s": round(time.time() - t0, 1),
+               "memory": mem,
+               "roofline": rep.as_dict()}
+        if verbose:
+            peak = mem.get("peak_bytes")
+            peak_s = f"{peak/1e9:7.2f} GB" if peak else "    n/a"
+            print(f"OK   {arch:22s} {shape:12s} {out['step']:7s} "
+                  f"compile={out['compile_s']:6.1f}s peak={peak_s} "
+                  f"dom={rep.dominant:10s} "
+                  f"c/m/x={rep.compute_s*1e3:.1f}/{rep.memory_s*1e3:.1f}/"
+                  f"{rep.collective_s*1e3:.1f} ms", flush=True)
+        return out
+    except Exception as e:
+        if verbose:
+            print(f"FAIL {arch:22s} {shape:12s} {type(e).__name__}: "
+                  f"{str(e)[:200]}", flush=True)
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape, "status": "fail",
+                "error": f"{type(e).__name__}: {e}",
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-weight-stationary", action="store_true",
+                    help="paper-faithful baseline decode (batch-sharded; "
+                    "weights gathered every step)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [(False,), (True,)] if args.both_meshes else \
+        [(args.multi_pod,)]
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    any_fail = False
+    for (multi_pod,) in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = 512 if multi_pod else 256
+        tag = "multipod" if multi_pod else "singlepod"
+        out_path = args.out or os.path.join(OUT_DIR, f"dryrun_{tag}.json")
+        results = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                results = json.load(f)
+        print(f"== mesh {dict(mesh.shape)} ({chips} chips) -> {out_path}",
+              flush=True)
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}|{shape}"
+                if results.get(key, {}).get("status") == "ok":
+                    continue
+                results[key] = run_pair(
+                    arch, shape, mesh, chips=chips, fsdp=not args.no_fsdp,
+                    weight_stationary=not args.no_weight_stationary)
+                if results[key]["status"] == "fail":
+                    any_fail = True
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+        n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+        n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+        n_fail = sum(1 for r in results.values() if r["status"] == "fail")
+        print(f"== {tag}: {n_ok} ok / {n_skip} skipped / {n_fail} failed",
+              flush=True)
+    return 1 if any_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Production meshes (functions, not constants: importing this module must
+never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (TPU v5e); 2 pods = 512 chips multi-pod.
+
+    Axes: "data" (batch / fsdp), "model" (tensor/expert parallel), and for
+    multi-pod a leading "pod" axis that shards batch only (params replicate
+    across the DCN; gradient all-reduce is the only cross-pod collective).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (CPU smoke runs)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

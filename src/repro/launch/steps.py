@@ -1,0 +1,221 @@
+"""Step functions + abstract inputs + shardings per (arch x input-shape).
+
+``build_step(arch, shape, mesh)`` returns a LoweringSpec: a pure step
+callable, the ShapeDtypeStruct stand-ins for every input (no allocation),
+and matching in/out NamedShardings -- everything launch/dryrun.py needs to
+``jax.jit(...).lower(...).compile()`` the pair on the production mesh.
+
+Shape semantics (DESIGN.md §4):
+  train_4k    -> train_step  (loss + AdamW update)
+  prefill_32k -> prefill_step (populate KV cache / SSM state; last-token
+                 logits only)
+  decode_32k  -> serve_step  (ONE token against a seq_len cache)
+  long_500k   -> serve_step; dense/vlm/moe archs run the sliding-window
+                 variant (window 16384, ring-buffer cache); ssm/hybrid run
+                 natively (O(1)/windowed state). whisper-tiny is skipped
+                 (configs.SKIPS).
+
+whisper-tiny's decoder is architecturally capped at 448 positions; its
+train/prefill/decode shapes use min(seq_len, 448) for the decoder stream
+with the full 1500-frame encoder context (noted in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import SKIPS, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.shapes import SHAPES
+from repro.models.registry import build
+from repro.sharding.specs import (ShardingRules, batch_shardings,
+                                  cache_shardings, logits_sharding,
+                                  opt_state_shardings, param_shardings,
+                                  replicated)
+from repro.training.optimizer import OptimizerConfig, adamw_update
+
+LONG_CONTEXT_WINDOW = 16384
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    name: str
+    step: Callable
+    args: Tuple[Any, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    model_cfg: Optional[ModelConfig] = None
+    shape_cfg: Optional[ShapeConfig] = None
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _abstract_tree(spec_tree, default_dtype):
+    from repro.models.layers import abstract_params
+    return abstract_params(spec_tree, default_dtype)
+
+
+def effective_config(arch: str, shape_name: str) -> ModelConfig:
+    """The config actually lowered for this pair (long-context variants)."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.family in ("dense", "vlm", "moe") \
+            and cfg.sliding_window == 0:
+        cfg = cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def batch_structs(cfg: ModelConfig, sc: ShapeConfig,
+                  with_labels: bool) -> Dict[str, Any]:
+    """ShapeDtypeStructs for a full-sequence batch (train / prefill)."""
+    b = sc.global_batch
+    s = sc.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        s = min(s, cfg.decoder_max_seq or s)
+        out["frames"] = _struct((b, cfg.encoder_seq, cfg.d_model), "float32")
+        out["tokens"] = _struct((b, s), "int32")
+    elif cfg.family == "vlm":
+        nv = min(cfg.num_visual_tokens, s - 1)
+        out["visual_embeds"] = _struct((b, nv, cfg.d_model), "float32")
+        out["tokens"] = _struct((b, s - nv), "int32")
+    else:
+        out["tokens"] = _struct((b, s), "int32")
+    if with_labels:
+        st = out["tokens"].shape
+        out["labels"] = _struct(st, "int32")
+        out["loss_mask"] = _struct(st, "float32")
+    return out
+
+
+def _opt_structs(param_structs):
+    return {
+        "mu": jax.tree.map(lambda x: _struct(x.shape, "float32"),
+                           param_structs),
+        "nu": jax.tree.map(lambda x: _struct(x.shape, "float32"),
+                           param_structs),
+        "step": _struct((), "int32"),
+    }
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh, *,
+               fsdp: bool = True, remat: bool = True,
+               moe_cap: float = 1.25,
+               decode_batch_replicated: bool = False,
+               weight_quant: str = "none") -> Optional[LoweringSpec]:
+    """None if the pair is skipped (configs.SKIPS)."""
+    if (arch, shape_name) in SKIPS:
+        return None
+    sc = SHAPES[shape_name]
+    cfg = effective_config(arch, shape_name)
+    if weight_quant != "none":
+        cfg = cfg.with_(weight_quant=weight_quant)
+    model = build(cfg)
+    # fsdp only pays off when model-sharded weights still exceed ~1 GB per
+    # device: smaller archs replicate across "data" and skip the per-layer
+    # weight all-gathers entirely (§Perf, qwen2-vl prefill iteration)
+    model_size = mesh.shape.get("model", 1)
+    param_bytes_per_dev = cfg.param_count() * 2 / model_size
+    fsdp = fsdp and param_bytes_per_dev > 1e9
+    rules = ShardingRules(mesh, fsdp=fsdp)
+
+    pspec_tree = model.param_specs()
+    params_sh = param_shardings(rules, pspec_tree)
+    params_st = _abstract_tree(pspec_tree, cfg.dtype)
+
+    if sc.kind == "train":
+        oc = OptimizerConfig()
+        bst = batch_structs(cfg, sc, with_labels=True)
+        bsh = batch_shardings(rules, bst)
+        opt_st = _opt_structs(params_st)
+        opt_sh = opt_state_shardings(rules, pspec_tree)
+
+        def train_step(params, opt_state, batch):
+            (loss, _aux), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=remat),
+                has_aux=True)(params)
+            params, opt_state, om = adamw_update(oc, grads, opt_state,
+                                                 params)
+            return params, opt_state, loss
+
+        return LoweringSpec(
+            name=f"{arch}/{shape_name}/train",
+            step=train_step,
+            args=(params_st, opt_st, bst),
+            in_shardings=(params_sh, opt_sh, bsh),
+            out_shardings=(params_sh, opt_sh, replicated(rules)),
+            donate_argnums=(0, 1),
+            model_cfg=cfg, shape_cfg=sc)
+
+    if sc.kind == "prefill":
+        bst = batch_structs(cfg, sc, with_labels=False)
+        bsh = batch_shardings(rules, bst)
+        windowed = bool(cfg.sliding_window) and cfg.family == "hybrid"
+        cache_spec = model.cache_specs(sc.global_batch, _cache_len(cfg, sc),
+                                       windowed=False)
+        cache_sh = cache_shardings(rules, cache_spec)
+
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(
+                params, batch, cache_len=_cache_len(cfg, sc),
+                moe_cap=moe_cap, last_only=True)
+            return logits, cache
+
+        lsh = logits_sharding(rules, (sc.global_batch, 1, cfg.vocab_size))
+        return LoweringSpec(
+            name=f"{arch}/{shape_name}/prefill",
+            step=prefill_step,
+            args=(params_st, bst),
+            in_shardings=(params_sh, bsh),
+            out_shardings=((lsh, cache_sh)),
+            model_cfg=cfg, shape_cfg=sc)
+
+    # decode kinds (decode_32k / long_500k)
+    windowed = (shape_name == "long_500k"
+                and cfg.family in ("dense", "vlm", "moe"))
+    cache_len = _cache_len(cfg, sc)
+    cache_spec = model.cache_specs(sc.global_batch, cache_len,
+                                   windowed=windowed)
+    cache_st = _abstract_tree(cache_spec, cfg.dtype)
+    cache_sh = cache_shardings(rules, cache_spec)
+    b = sc.global_batch
+    tok_st = _struct((b, 1), "int32")
+    pos_st = _struct((b,), "int32")
+    if decode_batch_replicated:
+        # weight-stationary decode: replicate the (tiny) token batch so
+        # the partitioner psums activations rather than all-gathering the
+        # fsdp weight shards every step (§Perf, nemotron decode_32k)
+        from jax.sharding import PartitionSpec as P
+        tok_sh = rules.named(P())
+        pos_sh = rules.named(P())
+    else:
+        tok_sh = rules.named(rules.batch_pspec(2, batch_size=b))
+        pos_sh = rules.named(rules.batch_pspec(1, batch_size=b))
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos,
+                                 windowed=windowed, moe_cap=moe_cap,
+                                 weight_stationary=decode_batch_replicated)
+
+    lsh = logits_sharding(rules, (b, cfg.vocab_size))
+    return LoweringSpec(
+        name=f"{arch}/{shape_name}/decode",
+        step=serve_step,
+        args=(params_st, cache_st, tok_st, pos_st),
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=((lsh, cache_sh)),
+        donate_argnums=(1,),
+        model_cfg=cfg, shape_cfg=sc)
+
+
+def _cache_len(cfg: ModelConfig, sc: ShapeConfig) -> int:
+    s = sc.seq_len
+    if cfg.family == "audio":
+        s = min(s, cfg.decoder_max_seq or s)
+    return s

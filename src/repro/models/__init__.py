@@ -1,0 +1,4 @@
+from repro.models.registry import build
+from repro.models.transformer import Model
+
+__all__ = ["build", "Model"]

@@ -1,0 +1,342 @@
+"""Functional layer library (no flax): ParamSpec trees + pure apply fns.
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays. Each module contributes a nested
+  dict of ``ParamSpec`` describing shape + *logical* sharding axes; the
+  sharding package maps logical axes -> mesh axes.
+* Weight layouts keep heads unfused: wq [embed, heads, head_dim] etc., so
+  the "heads" logical axis is shardable independently of head_dim.
+* All matmuls accumulate in float32 (``preferred_element_type``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# param specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 1.0            # stddev for normal (caller fan-in adjusts)
+    dtype: Optional[str] = None   # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="normal", scale=None, dtype=None) -> ParamSpec:
+    if scale is None:
+        # default fan-in init: 1/sqrt(first contracted dim)
+        scale = 1.0 / max(1.0, float(shape[0])) ** 0.5 if init == "normal" else 1.0
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_leaf_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree, path=()):
+    """Map ``fn(path, spec)`` over a nested dict of ParamSpec."""
+    if isinstance(tree, dict):
+        return {k: tree_map_specs(fn, v, path + (k,)) for k, v in tree.items()}
+    return fn(path, tree)
+
+
+def init_params(specs, key: jax.Array, default_dtype: str):
+    """Materialize a param tree from a spec tree (deterministic per path)."""
+    def _one(path, s: ParamSpec):
+        dt = jnp.dtype(s.dtype or default_dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        # stable across processes: Python's hash() is PYTHONHASHSEED-
+        # randomized, which made param init (and any borderline argmax
+        # downstream) differ run to run
+        import zlib
+        k = jax.random.fold_in(
+            key, zlib.crc32("/".join(path).encode()) % (2 ** 31))
+        if dt == jnp.int8:      # quantized weights: scale lives separately
+            return jax.random.randint(k, s.shape, -64, 65, jnp.int32
+                                      ).astype(jnp.int8)
+        return (jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(dt)
+    return tree_map_specs(_one, specs)
+
+
+def abstract_params(specs, default_dtype: str):
+    """ShapeDtypeStruct tree for lowering without allocation (dry-run)."""
+    def _one(path, s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype))
+    return tree_map_specs(_one, specs)
+
+
+def param_count(specs) -> int:
+    total = 0
+
+    def _one(path, s: ParamSpec):
+        nonlocal total
+        total += int(np.prod(s.shape))
+        return s
+    tree_map_specs(_one, specs)
+    return total
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_specs(cfg, with_bias: Optional[bool] = None) -> Dict[str, ParamSpec]:
+    use_bias = cfg.norm == "layernorm" if with_bias is None else with_bias
+    out = {"scale": spec((cfg.d_model,), ("embed",), init="ones")}
+    if use_bias:
+        out["bias"] = spec((cfg.d_model,), ("embed",), init="zeros")
+    return out
+
+
+def constrain_batch_sharding(x):
+    """Pin [B, S, d] activations to batch->data(+pod) sharding.
+
+    Tried as §Perf iteration 4 at dense-layer boundaries and REFUTED
+    (collective 44.0s -> 48.6s, peak +108 GB on deepseek-v3 train_4k:
+    GSPMD's own placement was already better). Kept as a utility --
+    no-op without an active mesh (CPU smoke paths).
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.shape:
+            from jax._src import mesh as _mesh_lib
+            am = _mesh_lib.thread_resources.env.physical_mesh
+        if am is None or not am.shape:
+            return x
+        axes = tuple(a for a in ("pod", "data") if a in am.shape)
+        parts = 1
+        for a in axes:
+            parts *= am.shape[a]
+        if parts <= 1 or x.shape[0] % parts:
+            return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, P(axes, *([None] * (x.ndim - 1))))
+    except Exception:
+        return x
+
+
+def constrain_replicated(x):
+    """Pin a (small) decode activation to full replication: the SPMD
+    partitioner then computes fsdp-sharded matmuls as partial-sum +
+    all-reduce of the tiny per-token activations instead of all-gathering
+    the weight shards every decode step (weight-stationary decode)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.shape:
+            from jax._src import mesh as _mesh_lib
+            am = _mesh_lib.thread_resources.env.physical_mesh
+        if am is None or not am.shape:
+            return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P())
+    except Exception:
+        return x
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def quantize_ffn_params(params):
+    """Post-training int8 quantization of FFN weights (per-out-channel).
+
+    Walks the param tree; every MLP dict ({wi|wi_gate,wi_up}, wo) gets its
+    weights replaced by int8 + f32 scale pairs matching the
+    ``weight_quant='int8_ffn'`` spec layout. Stacked-layer leading dims are
+    handled transparently (scales are per [layer, out_channel]... reduced
+    over the input dim only).
+    """
+    def quant(w):
+        wf = jnp.asarray(w, jnp.float32)
+        scale = jnp.max(jnp.abs(wf), axis=-2, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+        return q, jnp.squeeze(scale, -2)
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        if "wo" in node and ("wi" in node or "wi_gate" in node) \
+                and not any(k.endswith("_s") for k in node):
+            out = dict(node)
+            for k in ("wi", "wi_gate", "wi_up", "wo"):
+                if k in node:
+                    out[k], out[k + "_s"] = quant(node[k])
+            return out
+        return {k: walk(v) for k, v in node.items()}
+
+    return walk(params)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def embed_specs(cfg) -> Dict[str, ParamSpec]:
+    out = {"tok": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                       scale=0.02)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x, softcap: float = 0.0):
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    logits = jnp.einsum("...d,dv->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [..., S] -> cos,sin [..., S, head_dim//2] (float32)."""
+    freqs = jnp.asarray(_rope_freqs(head_dim, theta), jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def mrope_cos_sin(positions_thw, head_dim: int, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    positions_thw: [3, B, S] (temporal, height, width position ids).
+    ``sections`` split head_dim//2 frequency pairs into (t, h, w) groups;
+    each group takes its angle from the corresponding position stream.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    cos_t, sin_t = [], []
+    freqs = jnp.asarray(_rope_freqs(head_dim, theta), jnp.float32)
+    start = 0
+    for i, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        ang = positions_thw[i].astype(jnp.float32)[..., None] * f
+        cos_t.append(jnp.cos(ang))
+        sin_t.append(jnp.sin(ang))
+        start += sec
+    return jnp.concatenate(cos_t, -1), jnp.concatenate(sin_t, -1)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin [..., S, D//2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs (SwiGLU / squared-ReLU / GELU)
+# --------------------------------------------------------------------------
+
+def mlp_specs(cfg, d_ff: Optional[int] = None, axes_in: str = "embed",
+              ffn_axis: str = "ffn") -> Dict[str, ParamSpec]:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    quant = getattr(cfg, "weight_quant", "none") == "int8_ffn"
+    wdt = "int8" if quant else None
+    if cfg.activation == "swiglu":
+        out = {
+            "wi_gate": spec((d, d_ff), (axes_in, ffn_axis), dtype=wdt),
+            "wi_up": spec((d, d_ff), (axes_in, ffn_axis), dtype=wdt),
+            "wo": spec((d_ff, d), (ffn_axis, axes_in), dtype=wdt),
+        }
+        if quant:
+            out["wi_gate_s"] = spec((d_ff,), (ffn_axis,), init="ones",
+                                    dtype="float32")
+            out["wi_up_s"] = spec((d_ff,), (ffn_axis,), init="ones",
+                                  dtype="float32")
+            out["wo_s"] = spec((d,), (axes_in,), init="ones",
+                               dtype="float32")
+        return out
+    out = {
+        "wi": spec((d, d_ff), (axes_in, ffn_axis), dtype=wdt),
+        "wo": spec((d_ff, d), (ffn_axis, axes_in), dtype=wdt),
+    }
+    if quant:
+        out["wi_s"] = spec((d_ff,), (ffn_axis,), init="ones",
+                           dtype="float32")
+        out["wo_s"] = spec((d,), (axes_in,), init="ones", dtype="float32")
+    return out
+
+
+def _qmm(x, w, scale):
+    """x @ int8-w with per-output-channel dequant AFTER the matmul: the
+    int8 weight is what moves through HBM/ICI (half the bf16 bytes); the
+    MXU-side dequant is a cheap row scale. Survey dim-3 efficiency staple
+    for serving (§Perf int8_ffn iteration)."""
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    return y * scale.astype(jnp.float32)
+
+
+def apply_mlp(p, x, activation: str):
+    quant = "wo_s" in p
+    if activation == "swiglu":
+        if quant:
+            g = _qmm(x, p["wi_gate"], p["wi_gate_s"])
+            u = _qmm(x, p["wi_up"], p["wi_up_s"])
+        else:
+            g = jnp.einsum("...d,df->...f", x, p["wi_gate"],
+                           preferred_element_type=jnp.float32)
+            u = jnp.einsum("...d,df->...f", x, p["wi_up"],
+                           preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * u
+    else:
+        if quant:
+            h = _qmm(x, p["wi"], p["wi_s"])
+        else:
+            h = jnp.einsum("...d,df->...f", x, p["wi"],
+                           preferred_element_type=jnp.float32)
+        if activation == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        elif activation == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            raise ValueError(activation)
+    h = h.astype(x.dtype)
+    if quant:
+        y = jnp.einsum("...f,fd->...d", h, p["wo"].astype(h.dtype),
+                       preferred_element_type=jnp.float32)
+        return (y * p["wo_s"].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

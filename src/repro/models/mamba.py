@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD: state-space duality) block, chunked-parallel + recurrent.
+
+Full-sequence path uses the chunked SSD algorithm (quadratic attention-like
+form inside fixed chunks, linear recurrence across chunks via lax.scan) --
+this is the TPU adaptation of the CUDA selective-scan: chunk-local work is
+MXU-friendly batched matmul, and the only sequential dependency is the
+O(T/chunk) scan over chunk states.
+
+Decode path is the O(1) recurrence: h' = exp(dt*A) h + dt * B (x)  ;
+y = C . h' + D x. State cache = {"conv": rolling conv window, "ssd": h}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, spec
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state_dim
+
+
+def mamba_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, nheads, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        # order: [z (d_inner) | xBC (d_inner + 2N) | dt (nheads)]
+        "in_proj": spec((d, 2 * d_inner + 2 * n + nheads), ("embed", "ssm_inner")),
+        "conv_w": spec((cfg.ssm_conv_dim, conv_ch), (None, "ssm_inner"), scale=0.5),
+        "conv_b": spec((conv_ch,), ("ssm_inner",), init="zeros"),
+        "dt_bias": spec((nheads,), ("ssm_heads",), init="zeros"),
+        "a_log": spec((nheads,), ("ssm_heads",), init="ones"),
+        "d_skip": spec((nheads,), ("ssm_heads",), init="ones"),
+        "norm_scale": spec((d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": spec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba_cache_specs(cfg, batch: int):
+    d_inner, nheads, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": spec((batch, cfg.ssm_conv_dim - 1, conv_ch),
+                     ("batch", None, "ssm_inner"), init="zeros"),
+        "ssd": spec((batch, nheads, cfg.ssm_head_dim, n),
+                    ("batch", "ssm_heads", None, None), init="zeros",
+                    dtype="float32"),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, nheads, n = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), -1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+def _segsum(a):
+    """a [..., c] -> lower-triangular pairwise cumulative sums [..., c, c]."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def mamba_forward(p, x, cfg, *, chunk: int = 128,
+                  cache=None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence SSD. x [B,T,d] -> y [B,T,d] (+ final state if cache)."""
+    b, t, d = x.shape
+    d_inner, nheads, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # depthwise causal conv over xBC (kernel ssm_conv_dim)
+    kw = cfg.ssm_conv_dim
+    xbc_pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i:i + t] * p["conv_w"][i] for i in range(kw))
+    conv = jax.nn.silu(conv + p["conv_b"])
+    xs = conv[..., :d_inner].reshape(b, t, nheads, hd)
+    bm = conv[..., d_inner:d_inner + n]                      # [B,T,N]
+    cm = conv[..., d_inner + n:]                             # [B,T,N]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,T,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # [H]
+    da = dt * a                                                    # [B,T,H]
+
+    # ---- chunked SSD ------------------------------------------------------
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    nc = t // c
+    xs_c = xs.reshape(b, nc, c, nheads, hd).astype(jnp.float32)
+    bm_c = bm.reshape(b, nc, c, n).astype(jnp.float32)
+    cm_c = cm.reshape(b, nc, c, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, c, nheads)
+    da_c = da.reshape(b, nc, c, nheads)
+    da_cs = jnp.cumsum(da_c, axis=2)                               # [B,nc,c,H]
+
+    # intra-chunk (quadratic within chunk)
+    l = jnp.exp(_segsum(jnp.moveaxis(da_c, -1, -2)))     # [B,nc,H,c,c]
+    scores = jnp.einsum("bzin,bzjn->bzij", cm_c, bm_c)   # [B,nc,c,c]
+    dtx = xs_c * dt_c[..., None]                         # [B,nc,c,H,P]
+    y_intra = jnp.einsum("bzij,bzhij,bzjhp->bzihp", scores, l, dtx)
+
+    # chunk final states: S_z = sum_j exp(da_cs[-1]-da_cs[j]) * B_j x_j^T
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # [B,nc,c,H]
+    s_chunk = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn", bm_c, decay_states, dtx)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])            # [B,nc,H]
+    init = (cache["ssd"].astype(jnp.float32) if cache is not None
+            else jnp.zeros((b, nheads, hd, n), jnp.float32))
+
+    def scan_fn(h, inp):
+        s_c, dec = inp                                   # [B,H,P,N],[B,H]
+        h_prev = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # [B,nc,H,P,N]
+
+    # inter-chunk contribution: C_i . (decay_in * h_prev)
+    decay_in = jnp.exp(da_cs)                            # [B,nc,c,H]
+    y_inter = jnp.einsum("bzin,bzih,bzhpn->bzihp", cm_c, decay_in, h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, t, nheads, hd)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, t, d_inner)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if cache is not None:
+        new_cache = dict(cache,
+                         conv=xbc[:, t - (kw - 1):, :] if t >= kw - 1
+                         else jnp.concatenate([cache["conv"], xbc], 1)[:, -(kw - 1):],
+                         ssd=h_final)
+        return out, new_cache
+    return out, {}
+
+
+def mamba_decode_step(p, x, cfg, cache) -> Tuple[jax.Array, Dict]:
+    """x [B,1,d]; O(1) recurrent update."""
+    b = x.shape[0]
+    d_inner, nheads, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    kw = cfg.ssm_conv_dim
+
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)                  # [B,1,*]
+    window = jnp.concatenate([cache["conv"], xbc], 1)    # [B,kw,ch]
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs = conv[:, :d_inner].reshape(b, nheads, hd).astype(jnp.float32)
+    bm = conv[:, d_inner:d_inner + n].astype(jnp.float32)
+    cm = conv[:, d_inner + n:].astype(jnp.float32)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dtv * a)                               # [B,H]
+    h = cache["ssd"].astype(jnp.float32)
+    h = h * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xs, bm)
+    y = jnp.einsum("bn,bhpn->bhp", cm, h)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, dict(cache, conv=window[:, 1:], ssd=h)

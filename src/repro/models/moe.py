@@ -1,0 +1,190 @@
+"""Sparse Mixture-of-Experts (survey dim 3: "Sparse MoE for LVLMs").
+
+Implements the MoE-LLaVA / DeepSeek-VL2 / Arctic family of designs:
+  * top-k softmax router with renormalized gates,
+  * capacity-bounded sort-based dispatch (tokens sorted by expert id and
+    scattered into an [E, C, d] buffer -> batched expert matmul -> combine),
+    the TPU-idiomatic equivalent of GPU grouped-GEMM dispatch. Under an
+    ``experts -> model`` sharding this is what produces the all-to-all /
+    collective traffic the dry-run measures;
+  * optional shared experts (DeepSeek-V3: always-on experts),
+  * optional parallel dense residual MLP (Arctic),
+  * router load-balance auxiliary loss + z-loss (the survey's §V "popular
+    experts" open problem is exactly what this loss mitigates -- benchmarked
+    in benchmarks/moe_balance.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, spec, apply_mlp, mlp_specs
+
+
+def moe_specs(cfg) -> Dict[str, ParamSpec]:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    out = {"router": spec((d, e), ("embed", None), scale=0.02)}
+    if cfg.activation == "swiglu":
+        out["wi_gate"] = spec((e, d, f), ("expert", "embed", "moe_ffn"))
+        out["wi_up"] = spec((e, d, f), ("expert", "embed", "moe_ffn"))
+        out["wo"] = spec((e, f, d), ("expert", "moe_ffn", "embed"))
+    else:
+        out["wi"] = spec((e, d, f), ("expert", "embed", "moe_ffn"))
+        out["wo"] = spec((e, f, d), ("expert", "moe_ffn", "embed"))
+    for i in range(cfg.num_shared_experts):
+        out[f"shared_{i}"] = mlp_specs(cfg, d_ff=cfg.moe_d_ff)
+    if cfg.dense_residual:
+        out["dense"] = mlp_specs(cfg)
+    return out
+
+
+def _expert_ffn(p, buf, activation):
+    """buf [G,E,C,d] -> [G,E,C,d] via batched expert matmuls."""
+    if activation == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("gecd,edf->gecf", buf, p["wi_up"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(buf.dtype)
+    else:
+        h = jnp.einsum("gecd,edf->gecf", buf, p["wi"],
+                       preferred_element_type=jnp.float32)
+        h = (jnp.square(jax.nn.relu(h)) if activation == "relu2"
+             else jax.nn.gelu(h)).astype(buf.dtype)
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"],
+                      preferred_element_type=jnp.float32).astype(buf.dtype)
+
+
+def _mesh_groups(t: int) -> Tuple[int, Optional[Tuple[str, ...]], int]:
+    """Token groups for sharded dispatch = the mesh's batch extent.
+
+    A GLOBAL argsort over all tokens is un-partitionable: GSPMD must
+    all-gather the token stream and replicate the [E, C, d] dispatch
+    buffers (measured: 733 GB/device on deepseek-v3 train_4k -- the
+    EXPERIMENTS.md §Perf iteration this function is the fix for). Sorting
+    WITHIN per-data-shard groups keeps every dispatch op local to its
+    shard (GShard's grouping), and the expert einsum then lowers to the
+    expected all-to-all.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.shape:
+            # Auto-axes meshes don't surface an abstract mesh at trace
+            # time; fall back to the `with mesh:` context manager's mesh.
+            from jax._src import mesh as _mesh_lib
+            am = _mesh_lib.thread_resources.env.physical_mesh
+        if am is None or not am.shape:
+            return 1, None, 1
+        axes = tuple(a for a in ("pod", "data") if a in am.shape)
+        g = 1
+        for a in axes:
+            g *= am.shape[a]
+        if g > 1 and t % g == 0:
+            return g, axes, am.shape.get("model", 1)
+    except Exception:
+        pass
+    return 1, None, 1
+
+
+def _constrain(arr, pspec) -> jax.Array:
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(arr, P(*pspec))
+    except Exception:
+        return arr
+
+
+def apply_moe(p, x, cfg, *, capacity_factor: Optional[float] = 1.25
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x [B,S,d] -> (y [B,S,d], aux dict with router stats/losses).
+
+    capacity_factor=None -> DROPLESS (cap = T*k): the inference-engine
+    setting (DeepSeek-style serving); bounded capacity is the training
+    setting (tokens overflowing an expert are dropped, GShard-style).
+
+    Dispatch is GROUPED: tokens are split into one group per data shard
+    (1 group when no mesh is active), each group sort-dispatches into its
+    own per-group capacity buffer [G, E, C_g(+1 overflow col), d]. All
+    dispatch ops are group-local (shardable over "data"); the expert FFN
+    einsum contracts over the model-sharded expert axis (all-to-all).
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    g, batch_axes, model_size = _mesh_groups(t)
+    if (t // g) * k < e:
+        # decode-scale token counts: per-group capacity would starve the
+        # expert axis (slots/group < experts) and the grouped constraints
+        # only add resharding (measured: deepseek decode_32k 22ms -> 3.3s
+        # REGRESSION before this guard). Global dispatch is cheap here.
+        g, batch_axes = 1, None
+    tg = t // g
+    xg = x.reshape(g, tg, d)
+    if batch_axes:
+        xg = _constrain(xg, (batch_axes, None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # [G,Tg,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- per-group capacity-bounded sort-based dispatch -------------------
+    cap = (tg * k if capacity_factor is None
+           else max(1, int(capacity_factor * tg * k / e)))
+
+    def dispatch(xf, idx_g, gates_g):
+        """One group: xf [Tg,d], idx_g [Tg,k] -> (buf [E,C+1,d], meta)."""
+        flat_e = idx_g.reshape(-1).astype(jnp.int32)         # [Tg*k]
+        tok_id = (jnp.arange(tg * k, dtype=jnp.int32) // k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st = flat_e[order], tok_id[order]
+        first = jnp.searchsorted(se, se, side="left")
+        pos_in_e = (jnp.arange(tg * k, dtype=jnp.int32)
+                    - first.astype(jnp.int32))
+        keep = pos_in_e < cap
+        dest_c = jnp.where(keep, pos_in_e, cap)              # col cap = drop
+        buf = jnp.zeros((e, cap + 1, d), x.dtype)
+        buf = buf.at[se, dest_c].set(xf[st])
+        flat_g = gates_g.reshape(-1)[order] * keep
+        return buf[:, :cap], (se, dest_c, st, flat_g, keep)
+
+    bufs, metas = jax.vmap(dispatch)(xg, idx, gates)         # [G,E,C,d]
+    # groups data-sharded, experts model-sharded. (Full 2D expert
+    # parallelism was tried and REFUTED -- see sharding/specs.py note.)
+    if batch_axes:
+        bufs = _constrain(bufs, (batch_axes, "model", None, None))
+    y_buf = _expert_ffn(p, bufs, cfg.activation)             # [G,E,C,d]
+    if batch_axes:
+        y_buf = _constrain(y_buf, (batch_axes, "model", None, None))
+
+    def combine(y_g, meta):
+        se, dest_c, st, flat_g, keep = meta
+        y_pad = jnp.pad(y_g, ((0, 0), (0, 1), (0, 0)))       # drop col back
+        vals = y_pad[se, dest_c] * flat_g[:, None].astype(x.dtype)
+        return jnp.zeros((tg, d), jnp.float32).at[st].add(
+            vals.astype(jnp.float32)).astype(x.dtype)
+
+    out = jax.vmap(combine)(y_buf, metas).reshape(t, d)
+    keep = metas[4]
+    xf = xg.reshape(t, d)
+
+    # ---- shared experts / dense residual ---------------------------------
+    for i in range(cfg.num_shared_experts):
+        out = out + apply_mlp(p[f"shared_{i}"], xf, cfg.activation)
+    if cfg.dense_residual:
+        out = out + apply_mlp(p["dense"], xf, cfg.activation)
+
+    # ---- router aux losses (Switch/GShard load balance + z-loss) ---------
+    one_hot = jax.nn.one_hot(idx, e, dtype=jnp.float32)      # [G,Tg,k,E]
+    load = one_hot.sum((0, 1, 2)) / (t * k)                  # fraction routed
+    importance = probs.mean((0, 1))
+    lb_loss = e * jnp.sum(load * importance)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, -1)))
+    dropped = 1.0 - keep.mean()
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "load": load,
+           "dropped_frac": dropped}
+    return out.reshape(b, s, d), aux

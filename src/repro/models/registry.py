@@ -1,0 +1,13 @@
+"""Model registry: ``build(cfg)`` -> Model (assembly in transformer.py)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Model
+
+_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid", "audio")
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(cfg)

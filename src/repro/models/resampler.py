@@ -1,0 +1,76 @@
+"""Perceiver resampler (survey dim 3a: cross-modal projector/resampler).
+
+Flamingo's design: a small set of learned latent queries cross-attends to
+the (variable-length) visual patch stream, emitting a FIXED number of
+visual tokens regardless of input resolution -- the architectural
+alternative to post-hoc token pruning (dim 1). NVILA's "compress late"
+strategy is this applied after full-detail encoding.
+
+Selectable on VLM configs via ``projector="perceiver"`` (default "mlp").
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, spec
+
+
+def resampler_specs(cfg, num_latents: int = 64,
+                    num_heads: int = 8) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    hd = d // num_heads
+    return {
+        "latents": spec((num_latents, d), (None, "embed"), scale=0.02),
+        "wq": spec((d, num_heads, hd), ("embed", "heads", None)),
+        "wk": spec((d, num_heads, hd), ("embed", "heads", None)),
+        "wv": spec((d, num_heads, hd), ("embed", "heads", None)),
+        "wo": spec((num_heads, hd, d), ("heads", None, "embed")),
+        "ln_q": spec((d,), ("embed",), init="ones"),
+        "ln_kv": spec((d,), ("embed",), init="ones"),
+        "mlp_wi": spec((d, 4 * d), ("embed", "ffn")),
+        "mlp_wo": spec((4 * d, d), ("ffn", "embed")),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def apply_resampler(p, patches) -> jax.Array:
+    """patches [B, N, d] (any N) -> [B, num_latents, d].
+
+    One cross-attention block (latents query the patches) + MLP, residual
+    around both -- Flamingo uses a stack of these; one layer suffices for
+    the fixed-budget compression semantics.
+    """
+    b, n, d = patches.shape
+    lat = jnp.broadcast_to(p["latents"][None], (b,) + p["latents"].shape
+                           ).astype(patches.dtype)
+    q_in = _rms(lat, p["ln_q"])
+    kv_in = _rms(patches, p["ln_kv"])
+    nh, hd = p["wq"].shape[1], p["wq"].shape[2]
+    q = jnp.einsum("bld,dhe->blhe", q_in, p["wq"],
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bnd,dhe->bnhe", kv_in, p["wk"],
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bnd,dhe->bnhe", kv_in, p["wv"],
+                   preferred_element_type=jnp.float32)
+    s = jnp.einsum("blhe,bnhe->bhln", q, k) / (hd ** 0.5)
+    a = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhln,bnhe->blhe", a, v)
+    lat = lat + jnp.einsum("blhe,hed->bld", o, p["wo"],
+                           preferred_element_type=jnp.float32
+                           ).astype(patches.dtype)
+    h = _rms(lat, p["ln_q"])
+    h = jnp.einsum("bld,df->blf", h, p["mlp_wi"],
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h).astype(patches.dtype)
+    lat = lat + jnp.einsum("blf,fd->bld", h, p["mlp_wo"],
+                           preferred_element_type=jnp.float32
+                           ).astype(patches.dtype)
+    return lat

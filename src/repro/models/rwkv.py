@@ -1,0 +1,156 @@
+"""RWKV-6 "Finch" block (attention-free; data-dependent decay). [arXiv:2404.05892]
+
+Time-mix with dynamic data-dependent decay w_t (the Finch signature) and
+per-head bonus u; channel-mix with squared-ReLU. The decode state is O(1):
+one token-shift vector per mix + the [H, hd, hd] wkv state per layer --
+there is NO KV cache, which is why the survey's attention-score KV
+techniques are marked inapplicable for this arch (DESIGN.md §3).
+
+Full-sequence path: lax.scan over time (the recurrence is inherently
+sequential; chunk-parallel forms exist but the scan keeps the HLO compact
+and the state math identical to decode).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, spec
+
+_LORA_R = 32   # decay-LoRA rank (scaled-down faithful default 64)
+
+
+def _dims(cfg):
+    nheads = cfg.d_model // cfg.ssm_head_dim
+    return nheads, cfg.ssm_head_dim
+
+
+def rwkv_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nheads, hd = _dims(cfg)
+    tm = {
+        # static token-shift lerp coefficients per stream
+        "mu_r": spec((d,), ("embed",), init="zeros"),
+        "mu_k": spec((d,), ("embed",), init="zeros"),
+        "mu_v": spec((d,), ("embed",), init="zeros"),
+        "mu_w": spec((d,), ("embed",), init="zeros"),
+        "mu_g": spec((d,), ("embed",), init="zeros"),
+        "w_r": spec((d, d), ("embed", "heads_flat")),
+        "w_k": spec((d, d), ("embed", "heads_flat")),
+        "w_v": spec((d, d), ("embed", "heads_flat")),
+        "w_g": spec((d, d), ("embed", "heads_flat")),
+        "w_o": spec((d, d), ("heads_flat", "embed")),
+        # data-dependent decay: w_t = exp(-exp(w0 + lora(x_w)))
+        "w0": spec((d,), ("embed",), init="zeros"),
+        "w_lora_a": spec((d, _LORA_R), ("embed", None)),
+        "w_lora_b": spec((_LORA_R, d), (None, "embed"), scale=0.01),
+        "u": spec((nheads, hd), ("heads", None), init="zeros"),
+        "ln_scale": spec((d,), ("embed",), init="ones"),
+        "ln_bias": spec((d,), ("embed",), init="zeros"),
+    }
+    cm = {
+        "mu_k": spec((d,), ("embed",), init="zeros"),
+        "mu_r": spec((d,), ("embed",), init="zeros"),
+        "w_k": spec((d, cfg.d_ff), ("embed", "ffn")),
+        "w_v": spec((cfg.d_ff, d), ("ffn", "embed")),
+        "w_r": spec((d, d), ("embed", "embed_out")),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def rwkv_cache_specs(cfg, batch: int):
+    nheads, hd = _dims(cfg)
+    return {
+        "tm_shift": spec((batch, cfg.d_model), ("batch", "embed"), init="zeros"),
+        "cm_shift": spec((batch, cfg.d_model), ("batch", "embed"), init="zeros"),
+        "wkv": spec((batch, nheads, hd, hd), ("batch", "heads", None, None),
+                    init="zeros", dtype="float32"),
+    }
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _time_mix_streams(p, x, x_prev, cfg):
+    """Project the five streams; returns r,k,v,g [.. ,H,hd], w decay [..,H,hd]."""
+    nheads, hd = _dims(cfg)
+    r = _lerp(x, x_prev, p["mu_r"]) @ p["w_r"]
+    k = _lerp(x, x_prev, p["mu_k"]) @ p["w_k"]
+    v = _lerp(x, x_prev, p["mu_v"]) @ p["w_v"]
+    g = _lerp(x, x_prev, p["mu_g"]) @ p["w_g"]
+    xw = _lerp(x, x_prev, p["mu_w"])
+    w_dyn = (xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp((p["w0"] + w_dyn).astype(jnp.float32)))  # (0,1)
+    shp = x.shape[:-1] + (nheads, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            g.reshape(shp), w.reshape(shp))
+
+
+def _wkv_step(state, r, k, v, w, u):
+    """state [B,H,hd,hd] (k-major); one token. Returns (y, new_state)."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]            # [B,H,hd,hd]
+    y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state
+
+
+def _group_norm(y, scale, bias, eps=1e-5):
+    """Per-head LayerNorm over the last dim; y [..., H, hd]."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + eps)
+    return y * scale + bias
+
+
+def time_mix_forward(p, x, cfg, state=None) -> Tuple[jax.Array, Dict]:
+    """x [B,T,d] full-sequence scan. state: {"tm_shift","wkv"} or None."""
+    b, t, d = x.shape
+    nheads, hd = _dims(cfg)
+    x_prev_seq = jnp.concatenate(
+        [(state["tm_shift"][:, None] if state is not None
+          else jnp.zeros((b, 1, d), x.dtype)), x[:, :-1]], axis=1)
+    r, k, v, g, w = _time_mix_streams(p, x, x_prev_seq, cfg)
+    u = p["u"].astype(jnp.float32)
+
+    init = (state["wkv"].astype(jnp.float32) if state is not None
+            else jnp.zeros((b, nheads, hd, hd), jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        y, s = _wkv_step(s, rt, kt, vt, wt, u)
+        return s, y
+
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+         jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0)))
+    ys = jnp.moveaxis(ys, 0, 1)                          # [B,T,H,hd]
+    ys = _group_norm(ys, p["ln_scale"].reshape(nheads, hd),
+                     p["ln_bias"].reshape(nheads, hd))
+    ys = ys.reshape(b, t, d) * jax.nn.silu(g.reshape(b, t, d).astype(jnp.float32))
+    out = (ys.astype(x.dtype) @ p["w_o"])
+    new_state = {"tm_shift": x[:, -1], "wkv": final}
+    return out, new_state
+
+
+def channel_mix_forward(p, x, cfg, state=None) -> Tuple[jax.Array, Dict]:
+    b, t, d = x.shape
+    x_prev = jnp.concatenate(
+        [(state["cm_shift"][:, None] if state is not None
+          else jnp.zeros((b, 1, d), x.dtype)), x[:, :-1]], axis=1)
+    k = _lerp(x, x_prev, p["mu_k"]) @ p["w_k"]
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(_lerp(x, x_prev, p["mu_r"]) @ p["w_r"])
+    out = r * (k @ p["w_v"])
+    return out, {"cm_shift": x[:, -1]}
+
+
+# Layer assembly (pre-norms + residuals) lives in models/transformer.py;
+# the mixes are exposed separately so the norm'd streams drive the shift
+# states identically in prefill and decode.

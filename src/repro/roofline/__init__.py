@@ -1,0 +1,3 @@
+from repro.roofline.hw import HW, TPU_V5E
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo, roofline_from_compiled, RooflineReport)

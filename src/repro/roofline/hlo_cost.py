@@ -1,0 +1,203 @@
+"""Trip-count-aware HLO cost walk.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE -- useless for
+scanned (lax.scan) layer stacks where the body runs num_layers times. This
+module parses the post-SPMD HLO text into computations, recovers each while
+loop's trip count from the comparison constant in its condition
+computation, and walks the call graph multiplying per-computation costs by
+the product of enclosing trip counts:
+
+  * flops: every ``dot`` contributes 2 * prod(output_shape) * K, K = the
+    product of lhs contracting-dim sizes (operand shapes resolved through
+    a per-computation symbol table -- modern HLO dumps print operand NAMES
+    only). Exact for matmul-dominated models; elementwise flops ignored.
+  * collective bytes: all-gather(output) / 2x all-reduce(operand) /
+    reduce-scatter / all-to-all / collective-permute (operand), times the
+    enclosing trip multiplier. Ring-transfer weighting as in analysis.py.
+
+Shapes in the post-SPMD module are PER-DEVICE, so all results are
+per-device costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_WHILE_ATTR = re.compile(r"condition=%([\w\.\-]+).*?body=%([\w\.\-]+)")
+_CALLS_ATTR = re.compile(r"(?:calls|to_apply)=%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_COLL_OP_RE = re.compile(
+    r"=\s+(?:\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _dims(shape_match) -> List[int]:
+    return ([int(d) for d in shape_match.group(2).split(",")]
+            if shape_match.group(2) else [])
+
+
+def _prod(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _shape_bytes(shape_match) -> int:
+    return _prod(_dims(shape_match)) * _DTYPE_BYTES[shape_match.group(1)]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    coll_bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    max_const: int = 1
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    symtab: Dict[str, List[int]] = {}
+    depth = 0
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                is_entry = stripped.startswith("ENTRY")
+                body = stripped[6:] if is_entry else stripped
+                name = body.strip().lstrip("%").split(" ")[0].split("(")[0]
+                cur = Computation(name, is_entry=is_entry)
+                comps[name] = cur
+                symtab = {}
+                # parameters: map names to their (first) shape in the header
+                for pm in re.finditer(r"([\w\.\-]+):\s*(\([^)]*\)|"
+                                      + _SHAPE_RE.pattern + r")", stripped):
+                    sm = _SHAPE_RE.search(pm.group(2))
+                    if sm:
+                        symtab[pm.group(1)] = _dims(sm)
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        first_shape = _SHAPE_RE.search(line)
+        if dm and first_shape:
+            symtab[dm.group(1)] = _dims(first_shape)
+        # constants (trip-count recovery for conditions)
+        for c in _CONST_RE.findall(stripped):
+            cur.max_const = max(cur.max_const, int(c))
+        # whiles / calls
+        wm = _WHILE_ATTR.search(stripped)
+        if wm and " while(" in stripped:
+            cur.whiles.append((wm.group(1), wm.group(2)))
+        elif " fusion(" in stripped or " call(" in stripped:
+            cm = _CALLS_ATTR.search(stripped)
+            if cm:
+                cur.calls.append(cm.group(1))
+        # dot flops
+        if " dot(" in stripped and dm and first_shape:
+            out_elems = _prod(_dims(first_shape))
+            inside = stripped[stripped.index(" dot(") + 5:]
+            inside = inside.split(")")[0]
+            opnds = _OPND_RE.findall(inside)
+            k = 1
+            cm2 = _CONTRACT_RE.search(stripped)
+            if cm2 and opnds:
+                lhs = symtab.get(opnds[0], [])
+                for ci in cm2.group(1).split(","):
+                    if ci and int(ci) < len(lhs):
+                        k *= lhs[int(ci)]
+            cur.flops += 2.0 * out_elems * k
+        # collectives
+        cmatch = _COLL_OP_RE.search(stripped)
+        if cmatch and "-done(" not in stripped:
+            op = cmatch.group(1)
+            shapes = list(_SHAPE_RE.finditer(stripped))
+            split = cmatch.start(1)
+            out_b = sum(_shape_bytes(s) for s in shapes if s.start() < split)
+            opr_b = sum(_shape_bytes(s) for s in shapes
+                        if s.start() >= split)
+            if op == "all-gather":
+                inc = out_b
+            elif op == "all-reduce":
+                inc = 2 * opr_b
+            else:
+                inc = opr_b
+            cur.coll_bytes += inc
+            cur.coll_counts[op] = cur.coll_counts.get(op, 0) + 1
+            cur.coll_bytes_by_op[op] = cur.coll_bytes_by_op.get(op, 0.0) + inc
+    return comps
+
+
+def walk_costs(hlo: str) -> Dict[str, object]:
+    """Per-device totals with while-loop trip multipliers applied."""
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None and comps:
+        referenced = set()
+        for c in comps.values():
+            referenced.update(n for w in c.whiles for n in w)
+            referenced.update(c.calls)
+        entry = next((c for c in comps.values()
+                      if c.name not in referenced), None)
+    if entry is None:
+        return {"flops": 0.0, "collective_bytes": 0.0,
+                "collective_counts": {}, "entry": None}
+
+    memo: Dict[str, Tuple[float, float, Dict[str, int], Dict[str, float]]] \
+        = {}
+
+    def visit(name: str, seen=()):
+        if name not in comps or name in seen or len(seen) > 64:
+            return 0.0, 0.0, {}, {}
+        if name in memo:
+            return memo[name]
+        c = comps[name]
+        fl, cb = c.flops, c.coll_bytes
+        counts = dict(c.coll_counts)
+        by_op = dict(c.coll_bytes_by_op)
+        for callee in c.calls:
+            cf, cc, cn, cbo = visit(callee, seen + (name,))
+            fl += cf
+            cb += cc
+            for k, v in cn.items():
+                counts[k] = counts.get(k, 0) + v
+            for k, v in cbo.items():
+                by_op[k] = by_op.get(k, 0.0) + v
+        for cond, body in c.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            bf, bc, bn, bbo = visit(body, seen + (name,))
+            fl += trip * bf
+            cb += trip * bc
+            for k, v in bn.items():
+                counts[k] = counts.get(k, 0) + trip * v
+            for k, v in bbo.items():
+                by_op[k] = by_op.get(k, 0.0) + trip * v
+        memo[name] = (fl, cb, counts, by_op)
+        return memo[name]
+
+    flops, coll, counts, by_op = visit(entry.name)
+    return {"flops": flops, "collective_bytes": coll,
+            "collective_counts": counts, "collective_bytes_by_op": by_op,
+            "entry": entry.name}

@@ -1,0 +1,22 @@
+"""Target-hardware constants (TPU v5e; the container itself is CPU-only)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops_bf16: float      # per chip
+    hbm_bw: float               # bytes/s per chip
+    ici_bw: float               # bytes/s per link
+    hbm_bytes: float            # capacity per chip
+
+
+TPU_V5E = HW(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,     # 197 TFLOP/s bf16
+    hbm_bw=819e9,               # 819 GB/s
+    ici_bw=50e9,                # ~50 GB/s per ICI link
+    hbm_bytes=16e9,             # 16 GB HBM
+)

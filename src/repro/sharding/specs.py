@@ -1,0 +1,200 @@
+"""Logical-axis -> mesh sharding rules (GSPMD via NamedSharding).
+
+Every ParamSpec carries logical axis names ("embed", "heads", "ffn",
+"expert", "vocab", "batch", "cache_seq", ...). This module maps them onto
+the production mesh:
+
+  single pod : ("data", "model") = (16, 16)          -- 256 chips
+  multi-pod  : ("pod", "data", "model") = (2, 16, 16) -- 512 chips
+
+Rules (DESIGN.md §5):
+
+  * params: tensor-parallel over "model" via a PRIORITY list (experts first
+    -- expert parallelism -- then heads / ffn / vocab, falling back to the
+    d_model axis when the preferred axis does not divide, e.g. qwen2-vl's
+    12 heads or whisper's 51865 vocab on a 16-way axis). With ``fsdp=True``
+    a SECOND (different) axis is sharded over "data" (MaxText-style
+    fsdp+tensor 2D sharding) -- required for the 123B--671B archs whose
+    bf16 weights exceed one chip's HBM even 16-way sharded.
+  * the "pod" axis shards BATCH only (pure data parallel across the DCN;
+    params replicate across pods -- gradient all-reduce is the only
+    cross-pod collective, the standard multi-pod pattern).
+  * KV caches: batch -> "data", kv_heads -> "model" when divisible
+    (zamba2's 32 kv heads), else cache_seq -> "model" (sequence-parallel
+    cache: GSPMD turns the attention contraction into partial-softmax +
+    all-reduce, flash-decoding style) -- GQA kv<=8 archs cannot head-shard
+    a 16-way axis.
+  * divisibility is always checked; non-divisible axes stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec, tree_map_specs
+
+# logical axes eligible for the tensor ("model") dimension, in priority
+MODEL_PRIORITY = ("expert", "heads", "heads_flat", "kv_heads", "ffn",
+                  "moe_ffn", "ssm_inner", "vocab", "embed_out", "embed")
+# logical axes eligible for the fsdp ("data") dimension, in priority
+FSDP_PRIORITY = ("embed", "vocab", "ffn", "moe_ffn", "ssm_inner", "expert",
+                 "heads", "heads_flat", "embed_out")
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, *, fsdp: bool = True,
+                 cache_model_shard_threshold: float = 0.5e9):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.model_size = mesh.shape.get("model", 1)
+        self.data_size = mesh.shape.get("data", 1)
+        self.pod = "pod" in mesh.shape
+        self.batch_axes: Tuple[str, ...] = (
+            ("pod", "data") if self.pod else ("data",))
+        # KV caches only shard their seq axis over "model" when the
+        # batch-sharded leaf exceeds this (bytes); small caches replicate
+        # over model and skip the per-attention KV gather (§Perf,
+        # qwen2-vl prefill_32k iteration)
+        self.cache_model_shard_threshold = cache_model_shard_threshold
+
+    # ------------------------------------------------------------ params --
+    def param_pspec(self, s: ParamSpec) -> P:
+        axes = list(s.axes)
+        assign: Dict[int, str] = {}
+        # NOTE (§Perf iteration 2, REFUTED): sharding the expert axis over
+        # the whole ("data","model") grid -- full expert parallelism, no
+        # fsdp gathers for expert weights -- made the collective term 3-20x
+        # WORSE under GSPMD: the grouped dispatch buffers ([G,E,C,d],
+        # G data-sharded) then need a full reshard against the expert
+        # layout every layer. expert->model + fsdp is the measured optimum
+        # of this family (EXPERIMENTS.md §Perf).
+        # tensor axis
+        for name in MODEL_PRIORITY:
+            if name in axes:
+                i = axes.index(name)
+                if s.shape[i] % self.model_size == 0 and s.shape[i] > 0:
+                    assign[i] = "model"
+                    break
+        # fsdp axis (a different dim)
+        if self.fsdp:
+            for name in FSDP_PRIORITY:
+                if name in axes:
+                    i = axes.index(name)
+                    if i in assign:
+                        continue
+                    if s.shape[i] % self.data_size == 0 and s.shape[i] > 0:
+                        assign[i] = "data"
+                        break
+        return P(*[assign.get(i) for i in range(len(axes))])
+
+    # ------------------------------------------------------------- cache --
+    def cache_pspec(self, s: ParamSpec) -> P:
+        axes = list(s.axes)
+        out: list = [None] * len(axes)
+        for i, name in enumerate(axes):
+            if name == "batch":
+                # batch=1 long-context: replicate rather than 0-size shards
+                parts = 1
+                for a in self.batch_axes:
+                    parts *= self.mesh.shape[a]
+                if s.shape[i] % parts == 0:
+                    out[i] = self.batch_axes if len(self.batch_axes) > 1 \
+                        else self.batch_axes[0]
+        # model axis: kv_heads if divisible, else cache_seq
+        def try_axis(name):
+            if name in axes:
+                i = axes.index(name)
+                if out[i] is None and s.shape[i] % self.model_size == 0 \
+                        and s.shape[i] > 0:
+                    out[i] = "model"
+                    return True
+            return False
+        # per-device leaf bytes after batch sharding (dtype <= 4B assumed);
+        # batch=1 long-context caches CANNOT batch-shard, so don't divide
+        elems = 1
+        for d in s.shape:
+            elems *= d
+        batch_parts = 1
+        for a in self.batch_axes:
+            batch_parts *= self.mesh.shape[a]
+        if "batch" in axes and s.shape[axes.index("batch")] % batch_parts:
+            batch_parts = 1
+        approx_bytes = elems * 2 / batch_parts
+        is_attn_kv = "cache_seq" in axes or "kv_heads" in axes
+        if is_attn_kv:
+            # attention KV: replicating caches over "model" skips the
+            # per-attention KV gather, but un-shards the attention einsums
+            # too -- at prefill scale that is 16x REDUNDANT quadratic
+            # compute (measured: qwen2-vl prefill compute 0.17s -> 1.93s
+            # before this threshold was tightened to 0.5 GB; §Perf pair C
+            # iteration 2 verdict). Only truly tiny caches replicate.
+            if approx_bytes >= self.cache_model_shard_threshold:
+                try_axis("kv_heads") or try_axis("cache_seq")
+        else:
+            # SSM/recurrent states are rewritten EVERY decode step:
+            # replication would all-gather them per step -- always shard
+            try_axis("ssm_inner") or try_axis("heads")
+        return P(*out)
+
+    # ------------------------------------------------------------- batch --
+    def batch_pspec(self, ndim: int, batch_dim: int = 0,
+                    batch_size: Optional[int] = None) -> P:
+        parts = 1
+        for a in self.batch_axes:
+            parts *= self.mesh.shape[a]
+        spec: list = [None] * ndim
+        if batch_size is None or batch_size % parts == 0:
+            spec[batch_dim] = (self.batch_axes if len(self.batch_axes) > 1
+                               else self.batch_axes[0])
+        elif batch_size % (dp := self.mesh.shape.get("data", 1)) == 0:
+            spec[batch_dim] = "data"
+        return P(*spec)
+
+    def named(self, pspec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, pspec)
+
+
+# --------------------------------------------------------------------------
+# tree builders
+# --------------------------------------------------------------------------
+
+def param_shardings(rules: ShardingRules, spec_tree) -> Any:
+    return tree_map_specs(
+        lambda path, s: rules.named(rules.param_pspec(s)), spec_tree)
+
+
+def opt_state_shardings(rules: ShardingRules, spec_tree) -> Any:
+    ps = param_shardings(rules, spec_tree)
+    return {"mu": ps, "nu": ps,
+            "step": rules.named(P())}
+
+
+def cache_shardings(rules: ShardingRules, cache_spec_tree) -> Any:
+    return tree_map_specs(
+        lambda path, s: rules.named(rules.cache_pspec(s)), cache_spec_tree)
+
+
+def batch_shardings(rules: ShardingRules, batch_struct: Dict[str, Any]
+                    ) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_struct.items():
+        out[k] = rules.named(rules.batch_pspec(v.ndim,
+                                               batch_size=v.shape[0]))
+    return out
+
+
+def logits_sharding(rules: ShardingRules, shape: Tuple[int, ...]
+                    ) -> NamedSharding:
+    """[B, (S,) V] logits: batch -> data(+pod), vocab -> model."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    spec[0] = rules.batch_pspec(ndim, batch_size=shape[0])[0]
+    if shape[-1] % rules.model_size == 0:
+        spec[-1] = "model"
+    return rules.named(P(*spec))
+
+
+def replicated(rules: ShardingRules) -> NamedSharding:
+    return rules.named(P())

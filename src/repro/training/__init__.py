@@ -1,0 +1,5 @@
+from repro.training.optimizer import (
+    OptimizerConfig, adamw_init, adamw_update, cosine_lr, global_norm)
+from repro.training.data import SyntheticDataConfig, synthetic_batches
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+from repro.training.loop import TrainState, make_train_step, train_loop

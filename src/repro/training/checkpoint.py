@@ -1,0 +1,73 @@
+"""Sharded npz checkpointing for param/optimizer pytrees.
+
+Leaves are flattened to ``path.to.leaf`` keys and split across multiple npz
+shards capped at ``shard_bytes`` (a real multi-host framework writes one
+shard per host; here sharding keeps single files bounded and proves the
+layout). A small json manifest records the tree structure, dtypes, and step.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+    else:
+        out[".".join(prefix)] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(".")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def save_checkpoint(path: str, tree, step: int,
+                    shard_bytes: int = 512 * 1024 * 1024) -> Dict:
+    os.makedirs(path, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    shards, cur, cur_bytes = [], {}, 0
+    for k, v in flat.items():
+        if cur and cur_bytes + v.nbytes > shard_bytes:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+        cur[k] = v
+        cur_bytes += v.nbytes
+    if cur:
+        shards.append(cur)
+    manifest = {"step": step, "num_shards": len(shards),
+                "keys": {k: {"shard": i, "dtype": str(v.dtype),
+                             "shape": list(v.shape)}
+                         for i, sh in enumerate(shards)
+                         for k, v in sh.items()}}
+    for i, sh in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i:05d}.npz"), **sh)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def load_checkpoint(path: str) -> Tuple[Any, int]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat: Dict[str, np.ndarray] = {}
+    for i in range(manifest["num_shards"]):
+        with np.load(os.path.join(path, f"shard_{i:05d}.npz")) as z:
+            for k in z.files:
+                flat[k] = z[k]
+    tree = _unflatten({k: jax.numpy.asarray(v) for k, v in flat.items()})
+    return tree, manifest["step"]

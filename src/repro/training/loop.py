@@ -1,0 +1,88 @@
+"""Training loop: jitted train_step + host loop with checkpoint/resume."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import SyntheticDataConfig, make_batch
+from repro.training.optimizer import (OptimizerConfig, adamw_init,
+                                      adamw_update)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def make_train_step(model, oc: OptimizerConfig, *, remat: bool = True,
+                    donate: bool = True) -> Callable:
+    """Returns jitted (params, opt_state, batch) -> (params, opt_state,
+    metrics). The same function is what launch/dryrun.py lowers under the
+    production mesh (sharding is applied by the caller via in_shardings)."""
+
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=remat), has_aux=True)(params)
+        params, opt_state, om = adamw_update(oc, grads, opt_state, params)
+        metrics = {"loss": loss, **aux, **om}
+        return params, opt_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def train_loop(model, *, oc: Optional[OptimizerConfig] = None,
+               dc: Optional[SyntheticDataConfig] = None,
+               num_steps: int = 50, seed: int = 0,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+               resume: bool = False, log_every: int = 10,
+               log_fn: Callable[[str], None] = print) -> Dict:
+    """End-to-end host loop on synthetic data. Returns final metrics."""
+    oc = oc or OptimizerConfig(total_steps=num_steps)
+    dc = dc or SyntheticDataConfig()
+    start = 0
+    if resume and ckpt_dir:
+        tree, start = load_checkpoint(ckpt_dir)
+        params, opt_state = tree["params"], tree["opt_state"]
+        opt_state["step"] = jnp.asarray(opt_state["step"], jnp.int32)
+    else:
+        params = model.init(jax.random.PRNGKey(seed))
+        opt_state = adamw_init(params)
+    step_fn = make_train_step(model, oc)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, num_steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(model.cfg, dc, step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"non-finite loss at step {step}")
+        if log_every and (step % log_every == 0 or step == num_steps - 1):
+            log_fn(f"step {step:5d}  loss {loss:.4f}  "
+                   f"gnorm {float(metrics['grad_norm']):.3f}  "
+                   f"lr {float(metrics['lr']):.2e}")
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir,
+                            {"params": params, "opt_state": opt_state},
+                            step + 1)
+    wall = time.time() - t0
+    out = {"first_loss": losses[0] if losses else float("nan"),
+           "final_loss": losses[-1] if losses else float("nan"),
+           "steps": max(num_steps - start, 0), "wall_s": wall,
+           "loss_curve": losses}
+    if ckpt_dir and ckpt_every:
+        save_checkpoint(ckpt_dir, {"params": params, "opt_state": opt_state},
+                        num_steps)
+    out["params"] = params
+    out["opt_state"] = opt_state
+    return out

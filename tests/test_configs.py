@@ -1,0 +1,82 @@
+"""Assigned-architecture configs: exact numbers + smoke-variant limits."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+
+# (arch, layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment
+ASSIGNED = {
+    "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "rwkv6-3b": (32, 2560, 0, 0, 8960, 65536),
+    "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+}
+
+FAMILY = {
+    "mistral-large-123b": "dense", "deepseek-v3-671b": "moe",
+    "qwen2-vl-2b": "vlm", "arctic-480b": "moe", "phi4-mini-3.8b": "dense",
+    "rwkv6-3b": "ssm", "nemotron-4-340b": "dense", "whisper-tiny": "audio",
+    "granite-34b": "dense", "zamba2-1.2b": "hybrid",
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_assigned_numbers(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    # MoE archs: the assigned d_ff is the per-expert hidden width
+    assert ff in (cfg.d_ff, cfg.moe_d_ff)
+    assert cfg.vocab_size == v
+    assert cfg.family == FAMILY[arch]
+    if cfg.family != "ssm":
+        assert cfg.num_heads == h
+        assert cfg.num_kv_heads == kv
+    assert cfg.source, "every config must cite its source"
+
+
+def test_moe_details():
+    ds = get_config("deepseek-v3-671b")
+    assert (ds.num_experts, ds.experts_per_token,
+            ds.num_shared_experts) == (256, 8, 1)
+    assert ds.use_mla
+    ar = get_config("arctic-480b")
+    assert (ar.num_experts, ar.experts_per_token) == (128, 2)
+    assert ar.dense_residual
+
+
+def test_param_counts_in_band():
+    """Param counts should match the names within tolerance."""
+    expect = {"mistral-large-123b": 123e9, "deepseek-v3-671b": 671e9,
+              "qwen2-vl-2b": 2e9, "arctic-480b": 480e9,
+              "phi4-mini-3.8b": 3.8e9, "rwkv6-3b": 3e9,
+              "nemotron-4-340b": 340e9, "granite-34b": 34e9,
+              "zamba2-1.2b": 1.2e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * n < got < 1.4 * n, f"{arch}: {got/1e9:.1f}B vs {n/1e9}B"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_variant_is_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    assert (cfg.num_experts or 0) <= 4
+    assert cfg.family == FAMILY[arch]
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1

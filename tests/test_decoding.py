@@ -1,0 +1,160 @@
+"""Decoding strategies (dim 4): sampling, speculative, early exit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.decoding import (acceptance_rate, early_exit_decode_step,
+                                 layer_confidences, speculative_generate)
+from repro.core.decoding.sampling import (greedy, sample_probs, sample_token,
+                                          top_k_sample, top_p_sample)
+from repro.models import build
+
+
+# -------------------------------------------------------------- sampling --
+
+def test_greedy_is_argmax():
+    logits = jnp.asarray([[0.1, 3.0, -1.0], [5.0, 0.0, 0.1]])
+    assert greedy(logits).tolist() == [1, 0]
+    assert sample_token(None, logits, temperature=0.0).tolist() == [1, 0]
+
+
+def test_top_k_restricts_support():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0, 4.0]])
+    draws = {int(top_k_sample(jax.random.fold_in(key, i), logits, k=2,
+                              temperature=1.0)[0]) for i in range(50)}
+    assert draws <= {3, 4}
+
+
+def test_top_p_keeps_argmax_and_mass():
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    p = sample_probs(logits, temperature=1.0, top_p=0.6)
+    assert float(p[0, 0]) > 0
+    assert float(p[0, 3]) == 0.0
+    np.testing.assert_allclose(float(p.sum()), 1.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), temp=st.floats(0.2, 2.0))
+def test_sample_probs_is_distribution(seed, temp):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (2, 16))
+    p = sample_probs(logits, temperature=temp, top_k=8)
+    assert float(jnp.abs(p.sum(-1) - 1.0).max()) < 1e-5
+    assert float(p.min()) >= 0.0
+
+
+# ------------------------------------------------------------ speculative --
+
+@pytest.fixture(scope="module")
+def target_and_draft():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    target = build(cfg)
+    t_params = target.init(jax.random.PRNGKey(0))
+    dcfg = cfg.with_(num_layers=1, d_model=128, num_heads=4, num_kv_heads=2,
+                     d_ff=256, head_dim=32)
+    draft = build(dcfg)
+    d_params = draft.init(jax.random.PRNGKey(1))
+    return cfg, target, t_params, draft, d_params
+
+
+def test_speculative_greedy_exactness(target_and_draft):
+    """temperature=0 speculative decoding must emit EXACTLY the target's
+    greedy continuation (the draft only accelerates, never changes it)."""
+    cfg, target, tp, draft, dp = target_and_draft
+    rng = np.random.RandomState(0)
+    prompt = list(rng.randint(1, cfg.vocab_size, size=20))
+    toks, stats = speculative_generate(target, draft, tp, dp, prompt,
+                                       max_new_tokens=10, gamma=3,
+                                       temperature=0.0)
+    # reference greedy loop
+    ref = []
+    t_logits, cache = jax.jit(
+        lambda p, b: target.prefill(p, b, cache_len=64))(
+            tp, {"tokens": jnp.asarray(prompt)[None]})
+    tok = int(jnp.argmax(t_logits[0, -1]))
+    ref.append(tok)
+    pos = len(prompt)
+    step = jax.jit(target.decode_step)
+    for i in range(9):
+        lg, cache = step(tp, cache, jnp.asarray([[tok]], jnp.int32), pos)
+        tok = int(jnp.argmax(lg[0]))
+        ref.append(tok)
+        pos += 1
+    assert toks == ref
+    assert stats.proposed > 0
+
+
+def test_speculative_self_draft_accepts_everything(target_and_draft):
+    """Draft == target -> every proposal is accepted (sanity upper bound)."""
+    cfg, target, tp, _, _ = target_and_draft
+    rng = np.random.RandomState(1)
+    prompt = list(rng.randint(1, cfg.vocab_size, size=16))
+    toks, stats = speculative_generate(target, target, tp, tp, prompt,
+                                       max_new_tokens=9, gamma=3,
+                                       temperature=0.0)
+    assert acceptance_rate(stats) == 1.0
+    # gamma+1 tokens per target call: 3 calls for 9 tokens instead of 9
+    assert stats.target_calls <= 4
+
+
+def test_lantern_relaxation_increases_acceptance(target_and_draft):
+    cfg, target, tp, draft, dp = target_and_draft
+    rng = np.random.RandomState(2)
+    prompt = list(rng.randint(1, cfg.vocab_size, size=16))
+    _, strict = speculative_generate(target, draft, tp, dp, prompt,
+                                     max_new_tokens=10, gamma=3,
+                                     temperature=0.8)
+    _, relaxed = speculative_generate(target, draft, tp, dp, prompt,
+                                      max_new_tokens=10, gamma=3,
+                                      temperature=0.8, lantern_k=16,
+                                      lantern_delta=0.5)
+    assert acceptance_rate(relaxed) >= acceptance_rate(strict)
+
+
+# -------------------------------------------------------------- early exit --
+
+@pytest.fixture(scope="module")
+def ee_setup():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompt = jnp.asarray(rng.randint(1, cfg.vocab_size, size=(1, 16)),
+                         jnp.int32)
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, cache_len=32))(
+        params, {"tokens": prompt})
+    return model, params, cache
+
+
+def test_layer_confidences_shape(ee_setup):
+    model, params, cache = ee_setup
+    confs = layer_confidences(model, params, cache,
+                              jnp.asarray([[5]], jnp.int32), 16)
+    assert confs.shape == (model.cfg.num_layers, 1)
+    assert float(confs.min()) >= 0 and float(confs.max()) <= 1
+
+
+def test_early_exit_disabled_matches_full(ee_setup):
+    """threshold > 1 can never fire -> logits equal the plain decode."""
+    model, params, cache = ee_setup
+    tok = jnp.asarray([[7]], jnp.int32)
+    full, _ = jax.jit(model.decode_step)(params, cache, tok, 16)
+    ee, _, info = early_exit_decode_step(model, params, cache, tok, 16,
+                                         threshold=1.1)
+    assert not info["exited"] and info["layers_used"] == model.cfg.num_layers
+    np.testing.assert_allclose(np.asarray(ee), np.asarray(full[:, ]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_early_exit_fires_and_saves_flops(ee_setup):
+    model, params, cache = ee_setup
+    tok = jnp.asarray([[7]], jnp.int32)
+    _, _, info = early_exit_decode_step(model, params, cache, tok, 16,
+                                        threshold=0.0, patience=0,
+                                        min_layers=1)
+    assert info["exited"]
+    assert info["layers_used"] < model.cfg.num_layers
+    assert info["flops_frac"] < 1.0

@@ -1,0 +1,73 @@
+"""Engine edge cases: eos stopping, staggered arrivals, slot reuse."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.serving import Engine, EngineConfig, Request
+from repro.models import build
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_eos_stops_generation(small):
+    cfg, model, params = small
+    rng = np.random.RandomState(0)
+    prompt = list(rng.randint(1, cfg.vocab_size, size=16))
+    # find the greedy first token, then make it the eos id
+    eng = Engine(model, params, EngineConfig(max_batch=1, cache_len=64))
+    r = Request(rid=0, tokens=prompt, max_new_tokens=8)
+    eng.submit(r)
+    eng.run()
+    first = r.generated[0]
+    eng2 = Engine(model, params, EngineConfig(max_batch=1, cache_len=64,
+                                              eos_id=first))
+    r2 = Request(rid=0, tokens=prompt, max_new_tokens=8)
+    eng2.submit(r2)
+    eng2.run()
+    assert len(r2.generated) == 1 and r2.generated[0] == first
+
+
+def test_staggered_arrivals_never_negative_ttft(small):
+    cfg, model, params = small
+    rng = np.random.RandomState(1)
+    eng = Engine(model, params, EngineConfig(max_batch=2, cache_len=64))
+    for i in range(5):
+        eng.submit(Request(
+            rid=i, tokens=list(rng.randint(1, cfg.vocab_size, size=10)),
+            max_new_tokens=4, arrival=i * 0.05))
+    eng.run()
+    for r in eng.finished:
+        assert r.ttft() is not None and r.ttft() >= 0, (r.rid, r.ttft())
+        assert r.finish_time >= r.arrival
+
+
+def test_slot_reuse_more_requests_than_slots(small):
+    cfg, model, params = small
+    rng = np.random.RandomState(2)
+    eng = Engine(model, params, EngineConfig(max_batch=2, cache_len=64))
+    n = 7
+    for i in range(n):
+        eng.submit(Request(
+            rid=i, tokens=list(rng.randint(1, cfg.vocab_size, size=10)),
+            max_new_tokens=3))
+    out = eng.run()
+    assert out["finished"] == n
+    assert all(r is None for r in eng.slot_req), "all slots released"
+    # outputs must match an unconstrained run (slot reuse is transparent)
+    eng2 = Engine(model, params, EngineConfig(max_batch=8, cache_len=64))
+    rng = np.random.RandomState(2)
+    for i in range(n):
+        eng2.submit(Request(
+            rid=i, tokens=list(rng.randint(1, cfg.vocab_size, size=10)),
+            max_new_tokens=3))
+    eng2.run()
+    g1 = {r.rid: r.generated for r in eng.finished}
+    g2 = {r.rid: r.generated for r in eng2.finished}
+    assert g1 == g2

@@ -1,0 +1,294 @@
+"""KV cache library (dim 2a/2b): selection, budgets, merging, paging,
+prefix tree, tiered storage -- invariants + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache.budget import (adaptive_budgets, cake_layer_scores,
+                                        pyramid_budgets, uniform_budgets)
+from repro.core.kv_cache.merging import chai_cluster, d2o_merge
+from repro.core.kv_cache.paged import (BlockAllocator, OutOfBlocksError,
+                                       PagedKVPool, SeqBlocks,
+                                       fragmentation_waste)
+from repro.core.kv_cache.prefix_cache import RadixPrefixCache
+from repro.core.kv_cache.selection import SELECTORS, oracle_topk
+from repro.core.kv_cache.tiered import TieredKVStore
+
+
+def _kv(b=2, s=32, h=2, d=8, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return (jax.random.normal(ks[0], (b, s, h, d), jnp.float32),
+            jax.random.normal(ks[1], (b, s, h, d), jnp.float32))
+
+
+@pytest.mark.parametrize("name", sorted(SELECTORS))
+def test_selector_invariants(name):
+    b, s, h, d, budget = 2, 32, 2, 8, 10
+    k, v = _kv(b, s, h, d)
+    attn = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(2), (b, 4, s, s)), -1)
+    k2, v2, pos = SELECTORS[name](k, v, budget=budget, attn=attn)
+    assert k2.shape == (b, budget, h, d)
+    assert v2.shape == (b, budget, h, d)
+    assert pos.shape == (b, budget)
+    p = np.asarray(pos)
+    assert (np.diff(p, axis=1) > 0).all(), "positions must stay sorted"
+
+
+def test_streaming_keeps_sinks_and_recent():
+    k, v = _kv(1, 64)
+    _, _, pos = SELECTORS["streaming"](k, v, budget=12, sinks=4)
+    p = set(np.asarray(pos[0]).tolist())
+    assert {0, 1, 2, 3} <= p, "attention sinks must survive"
+    assert {56 + i for i in range(8)} <= p, "recent window must survive"
+
+
+def test_h2o_recent_window_guarantee():
+    k, v = _kv(1, 40)
+    attn = jnp.ones((1, 2, 40, 40)) / 40
+    _, _, pos = SELECTORS["h2o"](k, v, budget=10, attn=attn,
+                                 recent_frac=0.5)
+    p = set(np.asarray(pos[0]).tolist())
+    assert {35, 36, 37, 38, 39} <= p
+
+
+def test_snapkv_observation_window_retained():
+    k, v = _kv(1, 48)
+    attn = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (1, 2, 48, 48)), -1)
+    _, _, pos = SELECTORS["snapkv"](k, v, budget=20, attn=attn,
+                                    obs_window=8)
+    p = set(np.asarray(pos[0]).tolist())
+    assert {40 + i for i in range(8)} <= p
+
+
+def test_selector_vs_oracle_better_than_random():
+    """Attention-based selectors should recall oracle-top-k tokens better
+    than a random subset (the survey's core eviction claim)."""
+    rng = np.random.RandomState(0)
+    b, s, budget = 1, 64, 16
+    k, v = _kv(b, s, seed=3)
+    # synthetic attention with persistent heavy hitters
+    hot = rng.choice(s, 8, replace=False)
+    base = rng.rand(1, 2, s, s) * 0.05
+    base[:, :, :, hot] += 1.0
+    attn = jnp.asarray(base / base.sum(-1, keepdims=True), jnp.float32)
+    oracle = set(np.asarray(oracle_topk(attn, budget)[0]).tolist())
+
+    def recall(pos):
+        return len(set(np.asarray(pos[0]).tolist()) & oracle) / len(oracle)
+
+    _, _, pos_h2o = SELECTORS["h2o"](k, v, budget=budget, attn=attn)
+    rand_recall = np.mean([
+        len(set(rng.choice(s, budget, replace=False).tolist()) & oracle)
+        / len(oracle) for _ in range(100)])
+    assert recall(pos_h2o) > rand_recall + 0.2
+
+
+@settings(max_examples=25, deadline=None)
+@given(total=st.integers(64, 4096), layers=st.integers(1, 48),
+       seed=st.integers(0, 99))
+def test_budget_allocations_conserve_total(total, layers, seed):
+    rng = np.random.RandomState(seed)
+    for budgets in (pyramid_budgets(total, layers),
+                    adaptive_budgets(total, list(rng.rand(layers)))):
+        assert len(budgets) == layers
+        assert sum(budgets) == total
+        assert min(budgets) >= 1
+    u = uniform_budgets(total, layers)
+    assert len(set(u)) == 1          # equal shares (baseline)
+
+
+def test_pyramid_budgets_decrease_with_depth():
+    b = pyramid_budgets(1024, 16)
+    assert b[0] > b[-1], "pyramid: shallow layers get more budget"
+    assert all(x >= y for x, y in zip(b, b[1:]))
+
+
+def test_cake_scores_and_adaptive():
+    attns = [jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(i), (1, 2, 16, 16)), -1)
+        for i in range(4)]
+    scores = cake_layer_scores(attns)
+    assert len(scores) == 4 and all(s >= 0 for s in scores)
+    budgets = adaptive_budgets(256, scores)
+    assert sum(budgets) == 256
+
+
+def test_d2o_merge_blends_evicted():
+    k, v = _kv(1, 16)
+    keep_idx = jnp.asarray([[0, 2, 4, 6, 8, 10, 12, 14]], jnp.int32)
+    k2, v2, info = d2o_merge(k, v, keep_idx, threshold=-1.0)
+    assert k2.shape == (1, 8, 2, 8)
+    # with threshold=-1 every evicted token merges somewhere -> kept keys
+    # change vs plain gather
+    plain = jnp.take_along_axis(k, keep_idx[..., None, None], 1)
+    assert float(jnp.abs(k2 - plain).max()) > 0
+
+
+def test_chai_head_clustering():
+    attn = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (1, 8, 12, 12)), -1)
+    assign, info = chai_cluster(attn, num_clusters=3)
+    assert assign.shape == (8,)
+    assert set(np.asarray(assign).tolist()) <= {0, 1, 2}
+
+
+# ---------------------------------------------------------------- paged --
+
+def test_block_allocator_and_oom():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = [alloc.alloc() for _ in range(8)]
+    assert len(set(blocks)) == 8
+    with pytest.raises(OutOfBlocksError):
+        alloc.alloc()
+    alloc.free(blocks[0])
+    assert alloc.alloc() == blocks[0]
+
+
+def test_block_refcount_sharing():
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    b0 = alloc.alloc()
+    alloc.share(b0)
+    alloc.free(b0)
+    assert alloc.num_free == 3, "shared block must survive one free"
+    alloc.free(b0)
+    assert alloc.num_free == 4
+
+
+def test_paged_pool_prefill_append_gather():
+    L, bs = 2, 4
+    alloc = BlockAllocator(num_blocks=16, block_size=bs)
+    pool = PagedKVPool(num_layers=L, num_blocks=16, block_size=bs,
+                       num_kv_heads=2, head_dim=8)
+    rng = np.random.RandomState(0)
+    s = 10
+    seq = SeqBlocks(block_ids=[alloc.alloc() for _ in range(4)])
+    pk = rng.randn(L, s, 2, 8).astype(np.float32)
+    pv = rng.randn(L, s, 2, 8).astype(np.float32)
+    pool.write_prefill(seq, jnp.asarray(pk), jnp.asarray(pv))
+    assert seq.length == s
+    kt = rng.randn(L, 2, 8).astype(np.float32)
+    vt = rng.randn(L, 2, 8).astype(np.float32)
+    pool.append_token(seq, jnp.asarray(kt), jnp.asarray(vt))
+    k_all, v_all = pool.gather(seq, layer=1)
+    assert k_all.shape == (11, 2, 8)
+    np.testing.assert_allclose(np.asarray(k_all[:s]), pk[1], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k_all[s]), kt[1], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_all[s]), vt[1], atol=1e-6)
+
+
+def test_fragmentation_waste_metric():
+    seqs = [SeqBlocks(block_ids=[0, 1], length=5),
+            SeqBlocks(block_ids=[2], length=4)]
+    w = fragmentation_waste(seqs, block_size=4)
+    assert w["internal_slots_wasted"] == 3
+    assert w["used_slots"] == 9
+    assert 0 <= w["waste_frac"] < 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 30), min_size=1, max_size=20))
+def test_paged_vs_contiguous_allocation(lengths):
+    """PagedAttention's claim: block allocation wastes <= block_size-1 per
+    seq vs reserve-max contiguous allocation."""
+    bs = 4
+    max_len = 32
+    paged_tokens = sum(((l + bs - 1) // bs) * bs for l in lengths)
+    contiguous = len(lengths) * max_len
+    assert paged_tokens <= sum(lengths) + len(lengths) * (bs - 1)
+    if all(l < max_len - bs for l in lengths):
+        assert paged_tokens <= contiguous
+
+
+# ---------------------------------------------------------------- radix --
+
+def test_radix_prefix_match_insert():
+    alloc = BlockAllocator(num_blocks=64, block_size=4)
+    cache = RadixPrefixCache(alloc)
+    sys_prompt = list(range(100, 116))          # 16 tokens = 4 blocks
+    blocks = [alloc.alloc() for _ in range(4)]
+    cache.insert(sys_prompt, blocks, block_size=4)
+    got, matched, pinned = cache.match_prefix(sys_prompt + [1, 2, 3])
+    assert matched == 16
+    assert got == blocks
+    cache.unpin(pinned)
+    # diverging suffix shares the common prefix blocks
+    got2, matched2, pinned2 = cache.match_prefix(sys_prompt[:8] + [7] * 8)
+    assert matched2 == 8
+    assert got2 == blocks[:2]
+    cache.unpin(pinned2)
+
+
+def test_radix_eviction_respects_refcount():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    cache = RadixPrefixCache(alloc)
+    a = [alloc.alloc() for _ in range(2)]
+    cache.insert(list(range(8)), a, block_size=4)
+    _, _, pinned = cache.match_prefix(list(range(8)))
+    released = cache.evict(10)
+    assert released == 0, "pinned nodes must not be evicted"
+    cache.unpin(pinned)
+    assert cache.evict(10) > 0
+
+
+# ---------------------------------------------------------------- tiered --
+
+def test_tiered_store_offload_and_fetch():
+    store = TieredKVStore(block_size=4, num_kv_heads=2, head_dim=8,
+                          hbm_capacity_blocks=4)
+    rng = np.random.RandomState(0)
+    blocks = {}
+    for i in range(10):                      # exceeds HBM -> LRU offload
+        k = rng.randn(4, 2, 8).astype(np.float32)
+        v = rng.randn(4, 2, 8).astype(np.float32)
+        store.insert_block(i, k, v)
+        blocks[i] = (k, v)
+    res = store.residency()
+    assert res["hbm_blocks"] <= 4
+    assert res["host_blocks"] >= 6
+    assert res["stats"]["offloads"] >= 6
+    # fetch an offloaded block back: data intact, transfer metered
+    top, ks, vs = store.fetch_topk(blocks[0][0].mean(0), k=3)
+    assert store.residency()["stats"]["fetches"] >= 1
+    assert ks.shape[0] == 3 * 4
+
+
+@pytest.mark.parametrize("index", ["mean", "kmeans"])
+def test_tiered_topk_retrieval(index):
+    store = TieredKVStore(block_size=4, num_kv_heads=1, head_dim=8,
+                          hbm_capacity_blocks=2, index=index)
+    rng = np.random.RandomState(1)
+    blocks = {i: (rng.randn(4, 1, 8).astype(np.float32),
+                  rng.randn(4, 1, 8).astype(np.float32)) for i in range(8)}
+    for i, (k, v) in blocks.items():
+        store.insert_block(i, k, v)
+    q = rng.randn(1, 8).astype(np.float32)
+    top, ks, vs = store.fetch_topk(q, k=3)
+    assert len(top) == 3
+    # mean-index: the block whose centroid best matches q must be in top-3
+    scores = {i: float(blocks[i][0].reshape(-1, 8).mean(0) @ q.reshape(-1))
+              for i in blocks}
+    best = max(scores, key=scores.get)
+    if index == "mean":
+        assert best in top
+
+
+def test_prefetch_overlap_schedule():
+    from repro.core.kv_cache.tiered import prefetch_schedule
+    # fetch hides fully under compute
+    s_ovl = prefetch_schedule(compute_us_per_step=100.0,
+                              fetch_us_per_block=20.0, blocks_per_step=4,
+                              steps=10, overlap=True)
+    s_seq = prefetch_schedule(compute_us_per_step=100.0,
+                              fetch_us_per_block=20.0, blocks_per_step=4,
+                              steps=10, overlap=False)
+    assert s_ovl["total_us"] < s_seq["total_us"]
+    assert s_ovl["exposed_fetch_frac"] == 0.0
+    # fetch slower than compute: partially exposed even with overlap
+    s_bad = prefetch_schedule(compute_us_per_step=10.0,
+                              fetch_us_per_block=40.0, blocks_per_step=2,
+                              steps=10, overlap=True)
+    assert s_bad["exposed_fetch_frac"] > 0.0

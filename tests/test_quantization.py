@@ -1,0 +1,51 @@
+"""int8 FFN weight quantization (serving efficiency, §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.models.layers import quantize_ffn_params
+
+
+def test_quantize_roundtrip_small_error():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = quantize_ffn_params(params)
+    mlp = params["layers"]["mlp"]
+    qmlp = qparams["layers"]["mlp"]
+    assert qmlp["wi_gate"].dtype == jnp.int8
+    deq = (qmlp["wi_gate"].astype(jnp.float32)
+           * qmlp["wi_gate_s"][:, None, :])
+    rel = float(jnp.abs(deq - mlp["wi_gate"].astype(jnp.float32)).max()
+                / jnp.abs(mlp["wi_gate"]).max())
+    assert rel < 0.02, rel
+
+
+def test_quantized_model_close_to_full():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qcfg = cfg.with_(weight_quant="int8_ffn")
+    qmodel = build(qcfg)
+    qparams = quantize_ffn_params(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    full, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+    quant, _ = jax.jit(qmodel.forward)(qparams, {"tokens": tokens})
+    # int8 FFN: same argmax on nearly all positions, small logit drift
+    agree = float(jnp.mean(jnp.argmax(full, -1) == jnp.argmax(quant, -1)))
+    assert agree > 0.9, agree
+    drift = float(jnp.abs(full - quant).mean() / jnp.abs(full).mean())
+    assert drift < 0.05, drift
+
+
+def test_quantized_specs_shapes():
+    qcfg = get_config("phi4-mini-3.8b", smoke=True).with_(
+        weight_quant="int8_ffn")
+    model = build(qcfg)
+    specs = model.param_specs()
+    mlp = specs["layers"]["mlp"]
+    assert mlp["wi_gate"].dtype == "int8"
+    assert mlp["wi_gate_s"].shape == (qcfg.num_layers, qcfg.d_ff)

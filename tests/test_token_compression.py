@@ -1,0 +1,157 @@
+"""Visual token compression (dim 1): invariants + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import CompressionConfig
+from repro.core.token_compression.merging import (prune_then_merge,
+                                                  tome_merge, tome_to_count)
+from repro.core.token_compression.policy import (
+    compress_visual_tokens, fastv_scores_from_attention)
+from repro.core.token_compression.pruning import (PRUNERS,
+                                                  pyramiddrop_schedule)
+from repro.core.token_compression import video
+
+
+def _embeds(b, n, d, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, n, d),
+                             jnp.float32)
+
+
+@pytest.mark.parametrize("name", sorted(PRUNERS))
+def test_pruner_invariants(name):
+    b, n, d, keep = 2, 32, 16, 8
+    embeds = _embeds(b, n, d)
+    kwargs = {}
+    if name == "fastv":
+        kwargs["scores"] = jax.random.uniform(jax.random.PRNGKey(1), (b, n))
+    if name in ("sparsevlm", "cdpruner"):
+        kwargs["query"] = _embeds(b, 4, d, seed=2)
+    kept, idx, info = PRUNERS[name](embeds, keep, **kwargs)
+    assert kept.shape == (b, keep, d)
+    assert idx.shape == (b, keep)
+    idx_np = np.asarray(idx)
+    # ascending order (RoPE monotonicity requirement) and uniqueness
+    assert (np.diff(idx_np, axis=1) > 0).all(), f"{name}: idx not unique-sorted"
+    assert (idx_np >= 0).all() and (idx_np < n).all()
+    # kept embeds really are the selected rows
+    np.testing.assert_allclose(
+        np.asarray(kept), np.take_along_axis(np.asarray(embeds),
+                                             idx_np[..., None], axis=1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 48), keep_frac=st.floats(0.2, 0.9), seed=st.integers(0, 99))
+def test_l2_pruner_property(n, keep_frac, seed):
+    keep = max(1, int(n * keep_frac))
+    embeds = _embeds(1, n, 8, seed=seed)
+    kept, idx, _ = PRUNERS["l2"](embeds, keep)
+    assert kept.shape == (1, keep, 8)
+    idx_np = np.asarray(idx[0])
+    assert len(set(idx_np.tolist())) == keep
+    # l2 keeps the LOWEST-norm tokens
+    norms = np.linalg.norm(np.asarray(embeds[0]), axis=-1)
+    chosen = set(idx_np.tolist())
+    worst_kept = max(norms[i] for i in chosen)
+    best_dropped = min((norms[i] for i in range(n) if i not in chosen),
+                       default=np.inf)
+    assert worst_kept <= best_dropped + 1e-5
+
+
+def test_divprune_beats_random_diversity():
+    """DivPrune's min pairwise distance >= random subset's (its objective)."""
+    rng = np.random.RandomState(0)
+    # clustered data: many near-duplicates (sky/wall patches)
+    centers = rng.randn(4, 16)
+    pts = np.concatenate([c + 0.05 * rng.randn(16, 16) for c in centers])
+    embeds = jnp.asarray(pts[None], jnp.float32)
+    keep = 8
+
+    def min_dist(idx):
+        x = pts[idx]
+        x = x / np.linalg.norm(x, axis=1, keepdims=True)
+        s = 1 - x @ x.T
+        return (s + np.eye(len(idx)) * 9).min()
+
+    _, idx, _ = PRUNERS["divprune"](embeds, keep)
+    div_score = min_dist(np.asarray(idx[0]))
+    rand_scores = [min_dist(rng.choice(64, keep, replace=False))
+                   for _ in range(50)]
+    assert div_score >= np.mean(rand_scores)
+
+
+def test_fastv_scores_and_policy():
+    b, hq, sq, n_total = 2, 4, 24, 24
+    attn = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (b, hq, sq, n_total)), -1)
+    scores = fastv_scores_from_attention(attn, (0, 16))
+    assert scores.shape == (b, 16)
+    cc = CompressionConfig(token_pruner="fastv", keep_ratio=0.5)
+    embeds = _embeds(b, 16, 8)
+    kept, idx, info = compress_visual_tokens(cc, embeds, scores=scores)
+    assert kept.shape == (b, 8, 8)
+
+
+def test_tome_merge_reduces_and_conserves():
+    b, n, d = 1, 32, 8
+    embeds = _embeds(b, n, d)
+    merged, sizes, info = tome_merge(embeds, r=8)
+    assert merged.shape == (b, n - 8, d)
+    assert sizes.shape == (b, n - 8)
+    # token "mass" conserved: sizes sum to the original count
+    assert int(np.asarray(sizes).sum()) == b * n
+    merged2 = tome_to_count(embeds, keep=12)
+    assert merged2[0].shape[1] <= 16  # reaches <= keep via capped rounds
+
+
+def test_prune_then_merge():
+    embeds = _embeds(2, 40, 8)
+    out, kidx, info = prune_then_merge(embeds, keep=10)
+    assert out.shape[1] == 10
+    assert kidx.shape == (2, 10)
+    assert info["absorbed"] == 30
+
+
+def test_video_compression_paths():
+    b, t, p, d = 1, 12, 8, 16
+    vid = jax.random.normal(jax.random.PRNGKey(0), (b, t, p, d), jnp.float32)
+    merged, info = video.temporal_merge(vid, num_segments=4)
+    assert merged.shape[1] == 4
+    two_tok, info = video.llama_vid_compress(vid)
+    assert two_tok.shape == (b, t * 2, d)
+    ratio = video.dycoke_ratio(vid)
+    assert ratio.shape == (b, t)          # per-frame complexity ratio
+    assert float(ratio.min()) >= 0.1 and float(ratio.max()) <= 1.0
+    comp, info = video.dynamic_compress(vid, token_budget=32)
+    assert comp.shape == (b, 32, d)
+    ff, info = video.framefusion(vid, keep=24)
+    assert ff.shape == (b, 24, d)
+
+
+def test_dycoke_discriminates_static_from_action():
+    """Absolute (not per-video-normalized) complexity: a static video must
+    compress hard EVERYWHERE (regression test for the max-normalization
+    bug caught by examples/stream_video.py)."""
+    rng = np.random.RandomState(0)
+    bg = rng.randn(16, 64) * 0.3
+    static = jnp.asarray((np.tile(bg, (8, 1, 1))
+                          + rng.randn(8, 16, 64) * 0.02)[None], jnp.float32)
+    action = jnp.asarray((np.tile(bg, (8, 1, 1))
+                          + rng.randn(8, 16, 64) * 1.5)[None], jnp.float32)
+    r_static = float(video.dycoke_ratio(static).mean())
+    r_action = float(video.dycoke_ratio(action).mean())
+    assert r_static < 0.2, r_static
+    assert r_action > 0.7, r_action
+
+
+def test_pyramiddrop_schedule():
+    sched = pyramiddrop_schedule(1024, num_layers=32, stages=4,
+                                 final_keep_ratio=0.125)
+    assert len(sched) == 4
+    layers = [l for l, _ in sched]
+    keeps = [k for _, k in sched]
+    assert layers == sorted(layers)
+    assert keeps == sorted(keeps, reverse=True)
+    assert keeps[-1] >= int(1024 * 0.125 * 0.9)
