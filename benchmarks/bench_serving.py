@@ -1,4 +1,5 @@
-"""Benchmark: serving & scheduling (survey dim 2c).
+"""Benchmark: serving & scheduling (survey dim 2c), via the ``repro.api``
+facade.
 
 Real engine, real smoke model, virtual-clock metrics:
   * scheduler comparison on a bursty mixed-length workload,
@@ -7,15 +8,12 @@ Real engine, real smoke model, virtual-clock metrics:
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs import get_config
-from repro.core.serving import (CostModel, Engine, EngineConfig, PoolConfig,
-                                Request, goodput, simulate_colocated,
-                                simulate_disaggregated)
-from repro.models import build
+from repro.api import EngineConfig, LVLM, Request
+from repro.core.serving import (CostModel, PoolConfig, goodput,
+                                simulate_colocated, simulate_disaggregated)
 
 
 def _reqs(cfg, n, seed=0, shared=0, lo=10, hi=60, new=8, gap=0.001):
@@ -26,33 +24,24 @@ def _reqs(cfg, n, seed=0, shared=0, lo=10, hi=60, new=8, gap=0.001):
         max_new_tokens=new, arrival=i * gap) for i in range(n)]
 
 
-def schedulers() -> None:
-    cfg = get_config("phi4-mini-3.8b", smoke=True)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def schedulers(lvlm: LVLM) -> None:
     for sched in ("static", "continuous", "mlfq", "chunked"):
-        eng = Engine(model, params, EngineConfig(
-            max_batch=4, cache_len=128, scheduler=sched, chunk_size=16,
-            token_budget=48))
-        for r in _reqs(cfg, 12, seed=1):
-            eng.submit(r)
-        out = eng.run()
+        out = lvlm.serve(
+            _reqs(lvlm.cfg, 12, seed=1),
+            EngineConfig(max_batch=4, cache_len=128, scheduler=sched,
+                         chunk_size=16, token_budget=48)).stats
         emit(f"serve/sched/{sched}", out["virtual_time_s"] * 1e6,
              f"ttft_mean={out['ttft_mean']:.4f};"
              f"jct_mean={out['jct_mean']:.4f};"
              f"tput={out['throughput_tok_per_s']:.0f}")
 
 
-def prefix_cache() -> None:
-    cfg = get_config("phi4-mini-3.8b", smoke=True)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def prefix_cache(lvlm: LVLM) -> None:
     for on in (False, True):
-        eng = Engine(model, params, EngineConfig(
-            max_batch=4, cache_len=192, prefix_cache=on, prefix_block=16))
-        for r in _reqs(cfg, 10, seed=2, shared=64, lo=4, hi=16, new=4):
-            eng.submit(r)
-        out = eng.run()
+        out = lvlm.serve(
+            _reqs(lvlm.cfg, 10, seed=2, shared=64, lo=4, hi=16, new=4),
+            EngineConfig(max_batch=4, cache_len=192, prefix_cache=on,
+                         prefix_block=16)).stats
         extra = (f"hit_rate={out.get('prefix_token_hit_rate', 0):.3f};"
                  if on else "")
         emit(f"serve/prefix_cache/{'on' if on else 'off'}",
@@ -61,7 +50,6 @@ def prefix_cache() -> None:
 
 
 def disaggregation() -> None:
-    cfg = get_config("phi4-mini-3.8b", smoke=True)
     cost = CostModel(prefill_us_per_token=30.0, decode_us_per_token=600.0,
                      decode_us_per_ctx_token=0.01,
                      kv_bytes_per_token=500_000, transfer_gbps=20.0)
@@ -86,8 +74,9 @@ def disaggregation() -> None:
 
 
 def run() -> None:
-    schedulers()
-    prefix_cache()
+    lvlm = LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
+    schedulers(lvlm)
+    prefix_cache(lvlm)
     disaggregation()
 
 

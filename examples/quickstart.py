@@ -1,52 +1,62 @@
-"""Quickstart: build an LVLM, train a few steps, then serve requests
-through the taxonomy engine -- the whole public API in ~60 lines.
+"""Quickstart: the unified ``repro.api`` facade in ~10 lines --
+build an LVLM, generate with a compression preset, stream tokens,
+then serve a batch through the taxonomy engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.configs.base import CompressionConfig
-from repro.core.serving import Engine, EngineConfig, Request
-from repro.models import build
-from repro.training import (OptimizerConfig, SyntheticDataConfig,
-                            train_loop)
+from repro.api import (EngineConfig, GenerationConfig, LVLM, Request,
+                       resolve_compression)
 
 
 def main():
-    # 1. pick an assigned architecture (reduced smoke variant for CPU)
-    cfg = get_config("qwen2-vl-2b", smoke=True).with_(vocab_size=512)
-    model = build(cfg)
-    print(f"arch={cfg.name} family={cfg.family} "
-          f"params={model.cfg.param_count() / 1e6:.1f}M")
+    # 1. one call wraps config -> build -> param init (smoke = CPU-sized)
+    lvlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True, vocab_size=512)
+    print(f"arch={lvlm.cfg.name} family={lvlm.cfg.family} "
+          f"params={lvlm.cfg.param_count() / 1e6:.1f}M")
 
-    # 2. train a few steps on the synthetic multimodal pipeline
+    # 2. (optional) train a few steps -- the internal layer stays available
+    from repro.training import (OptimizerConfig, SyntheticDataConfig,
+                                train_loop)
     out = train_loop(
-        model,
+        lvlm.model,
         oc=OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=30),
         dc=SyntheticDataConfig(batch=4, seq_len=32),
         num_steps=30, log_every=10)
     print(f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
+    lvlm = lvlm.with_params(out["params"])
 
-    # 3. serve it: continuous batching + FastV-style visual pruning
-    eng = Engine(model, out["params"], EngineConfig(
-        max_batch=4, cache_len=128, scheduler="continuous",
-        compression=CompressionConfig(token_pruner="divprune",
-                                      keep_ratio=0.5)))
+    # 3. generate: FastV-style visual pruning via a named preset
     rng = np.random.RandomState(0)
-    for i in range(6):
-        eng.submit(Request(
-            rid=i,
-            tokens=list(rng.randint(1, cfg.vocab_size, size=12)),
-            visual_embeds=rng.randn(cfg.num_visual_tokens,
-                                    cfg.d_model).astype(np.float32) * 0.02,
-            max_new_tokens=8))
-    stats = eng.run()
-    print(f"served {stats['finished']} requests, "
-          f"{stats['tokens']} tokens, "
+    prompt = list(rng.randint(1, lvlm.cfg.vocab_size, size=12))
+    ve = rng.randn(lvlm.cfg.num_visual_tokens,
+                   lvlm.cfg.d_model).astype(np.float32) * 0.02
+    result = lvlm.generate(
+        prompt,
+        GenerationConfig(max_new_tokens=8, compression="divprune-0.5"),
+        visual_embeds=ve)
+    print("generated:", result.tokens)
+
+    # 4. stream tokens one by one (same signature, any decoder strategy)
+    print("streamed :", list(lvlm.generate_stream(
+        prompt, GenerationConfig(max_new_tokens=8), visual_embeds=ve)))
+
+    # 5. serve a batch: continuous batching + virtual-clock metrics
+    reqs = [Request(rid=i,
+                    tokens=list(rng.randint(1, lvlm.cfg.vocab_size,
+                                            size=12)),
+                    visual_embeds=rng.randn(
+                        lvlm.cfg.num_visual_tokens,
+                        lvlm.cfg.d_model).astype(np.float32) * 0.02,
+                    max_new_tokens=8)
+            for i in range(6)]
+    report = lvlm.serve(reqs, EngineConfig(
+        max_batch=4, cache_len=128, scheduler="continuous",
+        compression=resolve_compression("divprune-0.5")))
+    stats = report.stats
+    print(f"served {stats['finished']} requests, {stats['tokens']} tokens, "
           f"throughput {stats['throughput_tok_per_s']:.0f} tok/s (virtual)")
-    print("generated:", eng.finished[0].generated)
 
 
 if __name__ == "__main__":

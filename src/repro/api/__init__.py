@@ -1,0 +1,31 @@
+"""``repro.api`` -- the unified public inference surface.
+
+One facade (``LVLM``), one config (``GenerationConfig``), four decoder
+strategies (greedy | sampling | speculative | early_exit), named
+compression presets -- everything else (``repro.core.*``, ``repro.models``)
+is the internal layer and stays importable for advanced use.
+
+    from repro.api import LVLM, GenerationConfig
+    lvlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+    result = lvlm.generate(prompt, GenerationConfig(max_new_tokens=16))
+"""
+from repro.api.decoders import (
+    DECODERS, EarlyExitDecoder, GreedyDecoder, SamplingDecoder,
+    SpeculativeDecoder, make_decoder)
+from repro.api.generation import (
+    COMPRESSION_PRESETS, DECODER_NAMES, GenerationConfig,
+    resolve_compression)
+from repro.api.lvlm import LVLM, GenerationResult, ServeResult
+
+# re-exported internal-layer names commonly needed alongside the facade
+from repro.configs.base import CompressionConfig
+from repro.core.serving import EngineConfig, Request
+
+__all__ = [
+    "LVLM", "GenerationConfig", "GenerationResult", "ServeResult",
+    "DECODERS", "DECODER_NAMES", "make_decoder",
+    "GreedyDecoder", "SamplingDecoder", "SpeculativeDecoder",
+    "EarlyExitDecoder",
+    "COMPRESSION_PRESETS", "resolve_compression", "CompressionConfig",
+    "EngineConfig", "Request",
+]

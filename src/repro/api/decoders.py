@@ -1,0 +1,269 @@
+"""Decoder strategies: the four survey dim-4 decode paths behind one hook.
+
+Each strategy implements the engine decoder protocol (duck-typed; see
+``SamplingEngineDecoder`` in core/serving/engine.py for the contract):
+
+    engine_decode(engine, reqs) -> {slot: [emitted tokens]}
+    validate(engine)            -- optional, run at Engine construction
+    stats()                     -- strategy-specific counters for reports
+
+``greedy`` / ``sampling`` reuse the engine's fixed-shape jitted decode step
+and work at any batch size. ``speculative`` and ``early_exit`` are batch-1
+introspection paths: speculative replaces the memory-bound decode loop with
+draft-then-verify rounds against the slot cache (one ``model.extend`` per
+round), early exit runs the host-side unstacked-layer loop so skipped layers
+are truly never executed. Both share their round primitives with the
+standalone drivers in ``repro.core.decoding``, so engine-integrated and
+library-level decoding follow the same math.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decoding.early_exit import early_exit_decode_step
+from repro.core.decoding.sampling import sample_token
+from repro.core.decoding.speculative import (
+    SpecStats, accept_block, acceptance_rate, draft_block,
+    lantern_neighbourhood_from_params)
+from repro.core.serving.engine import (
+    SamplingEngineDecoder, _slot_get, _slot_set)
+
+
+class GreedyDecoder(SamplingEngineDecoder):
+    """Argmax decoding (temperature forced to 0, any batch size)."""
+    name = "greedy"
+
+    def __init__(self):
+        super().__init__(greedy=True)
+
+
+class SamplingDecoder(SamplingEngineDecoder):
+    """Temperature / top-k / top-p sampling from EngineConfig (any batch)."""
+    name = "sampling"
+
+    def __init__(self):
+        super().__init__(greedy=False)
+
+
+class EarlyExitDecoder:
+    """AdaInfer-style adaptive-depth decoding inside the engine (dim 4b).
+
+    Batch-1: the logit-lens confidence of garbage (inactive) slots would
+    poison the joint exit decision, so the strategy requires max_batch=1.
+    """
+    name = "early_exit"
+
+    def __init__(self, threshold: float = 0.9, patience: int = 2,
+                 min_layers: int = 2):
+        self.threshold = threshold
+        self.patience = patience
+        self.min_layers = min_layers
+        self.layers_used: List[int] = []
+        self.exits = 0
+
+    def validate(self, eng) -> None:
+        if eng.ec.max_batch != 1:
+            raise ValueError("early_exit is a batch-1 introspection path; "
+                             "use max_batch=1")
+        if eng.compacting:
+            raise ValueError("early_exit is incompatible with live KV "
+                             "compaction (needs the non-windowed cache)")
+        if eng.cfg.family not in ("dense", "vlm", "moe") or eng.cfg.use_mla:
+            raise ValueError("early_exit targets non-MLA attention families")
+
+    def stats(self) -> Dict:
+        n = max(len(self.layers_used), 1)
+        return {"layers_used": list(self.layers_used),
+                "layers_used_mean": sum(self.layers_used) / n,
+                "exit_rate": self.exits / n}
+
+    def engine_decode(self, eng, reqs) -> Dict[int, List[int]]:
+        emitted: Dict[int, List[int]] = {}
+        cost = 0.0
+        for r in reqs:
+            s = r._slot
+            ctx = float(eng.slot_pos[s])
+            toks = jnp.asarray([[int(eng.slot_last_tok[s])]], jnp.int32)
+            logits, eng.pool, info = early_exit_decode_step(
+                eng.model, eng.params, eng.pool, toks,
+                int(eng.slot_pos[s]), threshold=self.threshold,
+                patience=self.patience, min_layers=self.min_layers)
+            self.layers_used.append(int(info["layers_used"]))
+            self.exits += int(info["exited"])
+            # virtual clock sees the FLOPs actually spent: a decode step
+            # scaled by the fraction of layers executed
+            cost += (eng.ec.cost.decode_step_time(1, ctx)
+                     * info["flops_frac"])
+            eng.key, k1 = jax.random.split(eng.key)
+            tok = int(sample_token(k1, logits,
+                                   temperature=eng.ec.temperature,
+                                   top_k=eng.ec.top_k,
+                                   top_p=eng.ec.top_p)[0])
+            eng.slot_last_tok[s] = tok
+            eng.slot_pos[s] += 1
+            emitted[s] = [tok]
+        eng._iter_decode_cost = cost
+        return emitted
+
+
+class SpeculativeDecoder:
+    """Draft-then-verify decoding inside the engine (dim 4a, batch-1).
+
+    Per engine iteration, one round: the draft model proposes ``gamma``
+    tokens from its own text-only cache (Gagrani-style language-only
+    drafting -- the draft never sees the visual embeddings), then ONE
+    ``model.extend`` over the request's slot cache scores the whole block
+    and Leviathan/Chen acceptance (optionally LANTERN-relaxed) emits
+    1..gamma+1 tokens. Round primitives are shared with
+    ``speculative_generate``; ``draft=None`` self-drafts with the target.
+    """
+    name = "speculative"
+
+    def __init__(self, draft=None, d_params=None, *, gamma: int = 4,
+                 lantern_k: int = 0, lantern_delta: float = 0.2):
+        if (draft is None) != (d_params is None):
+            raise ValueError("pass draft model AND params, or neither")
+        self.draft_model = draft
+        self.d_params = d_params
+        self.gamma = gamma
+        self.lantern_k = lantern_k
+        self.lantern_delta = lantern_delta
+        self.stats_ = SpecStats()
+        self._slot_state: Dict[int, Dict] = {}   # slot -> {req, d_cache}
+        self._bound = False
+
+    def validate(self, eng) -> None:
+        if eng.ec.max_batch != 1:
+            raise ValueError("speculative is a batch-1 path inside the "
+                             "engine; use max_batch=1")
+        if eng.compacting:
+            raise ValueError("speculative verify (extend) is incompatible "
+                             "with live KV compaction")
+        if eng.cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError("speculative needs extend(); attention "
+                             "families only")
+
+    def stats(self) -> Dict:
+        st = self.stats_
+        return {"acceptance": acceptance_rate(st),
+                "proposed": st.proposed, "accepted": st.accepted,
+                "bonus": st.bonus, "target_calls": st.target_calls,
+                "draft_calls": st.draft_calls,
+                "mean_accepted_per_call": st.mean_accepted_per_call()}
+
+    def _bind(self, eng) -> None:
+        if self._bound:
+            return
+        draft = self.draft_model if self.draft_model is not None \
+            else eng.model
+        self._dp = self.d_params if self.draft_model is not None \
+            else eng.params
+        # draft positions run text-only; headroom for the deepest round
+        d_cache_len = eng.ec.cache_len + self.gamma + 8
+        self._d_prefill = jax.jit(
+            lambda p, b: draft.prefill(p, b, cache_len=d_cache_len))
+        self._d_extend = jax.jit(draft.extend)
+        self._d_decode = jax.jit(draft.decode_step)
+        self._nbhd = None
+        if self.lantern_k > 1:
+            self._nbhd = lantern_neighbourhood_from_params(
+                eng.params, self.lantern_k)
+        # cost-model scale for the draft's forward passes (virtual clock)
+        try:
+            self._draft_cost_ratio = (draft.cfg.active_param_count()
+                                      / max(1, eng.model.cfg
+                                            .active_param_count()))
+        except Exception:
+            self._draft_cost_ratio = 1.0
+        self._bound = True
+
+    def engine_decode(self, eng, reqs) -> Dict[int, List[int]]:
+        self._bind(eng)
+        ec = eng.ec
+        emitted_map: Dict[int, List[int]] = {}
+        cost = 0.0
+        for r in reqs:
+            s = r._slot
+            st = self._slot_state.get(s)
+            if st is None or st["req"] is not r:     # slot reused: re-prefill
+                prompt = jnp.asarray(r.tokens, jnp.int32)[None]
+                _, d_cache = self._d_prefill(self._dp, {"tokens": prompt})
+                self.stats_.draft_calls += 1
+                st = {"req": r, "d_cache": d_cache,
+                      "d_valid": len(r.tokens)}
+                self._slot_state[s] = st
+            nv = int(eng.slot_nv[s])
+            t_len = int(eng.slot_pos[s]) - nv        # text tokens scored
+            tok = int(eng.slot_last_tok[s])
+            # verify writes positions slot_pos..slot_pos+g; keep clear of
+            # the reserved scratch position cache_len-1
+            g = max(0, min(self.gamma,
+                           ec.cache_len - 2 - int(eng.slot_pos[s])))
+            committed = list(r.tokens) + list(r.generated)  # text stream
+            lead = committed[st["d_valid"]:t_len + 1]
+            draft_toks, draft_ps, st["d_cache"], eng.key = draft_block(
+                self._d_extend, self._d_decode, self._dp, st["d_cache"],
+                lead, st["d_valid"], gamma=g, temperature=ec.temperature,
+                key=eng.key, stats=self.stats_)
+            block = jnp.asarray([[tok] + draft_toks], jnp.int32)
+            one = _slot_get(eng.pool, s)
+            t_logits, one = eng._jit_extend(eng.params, one, block,
+                                            jnp.int32(eng.slot_pos[s]))
+            eng.pool = _slot_set(eng.pool, s, one)
+            self.stats_.target_calls += 1
+            self.stats_.proposed += g
+            emitted, n_acc, bonus, eng.key = accept_block(
+                eng.key, t_logits, draft_toks, draft_ps,
+                temperature=ec.temperature,
+                limit=r.max_new_tokens - len(r.generated),
+                nbhd=self._nbhd, lantern_delta=self.lantern_delta)
+            self.stats_.accepted += n_acc
+            self.stats_.bonus += int(bonus)
+            eng.slot_pos[s] += 1 + n_acc             # tok + accepted drafts
+            # whole-block accept leaves the last accepted draft unwritten in
+            # the draft cache; next round's lead replays it
+            st["d_valid"] = (t_len + 1 + n_acc
+                             - (1 if (g > 0 and n_acc == g) else 0))
+            eng.slot_last_tok[s] = emitted[-1]
+            emitted_map[s] = emitted
+            # virtual clock: the verify pass is a compute-dense (1+g)-token
+            # block scoring (prefill-shaped), the draft pays g decode steps
+            # scaled by its active-param ratio
+            ctx = float(eng.slot_pos[s])
+            cost += (ec.cost.prefill_time(1 + g)
+                     + self._draft_cost_ratio * g
+                     * ec.cost.decode_step_time(1, ctx))
+        eng._iter_decode_cost = cost
+        return emitted_map
+
+
+DECODERS = {
+    "greedy": GreedyDecoder,
+    "sampling": SamplingDecoder,
+    "speculative": SpeculativeDecoder,
+    "early_exit": EarlyExitDecoder,
+}
+
+
+def make_decoder(name: str, gen=None, *, draft=None, d_params=None):
+    """Build a decoder strategy, optionally parameterized by a
+    ``GenerationConfig`` and (for speculative) a draft model."""
+    if name not in DECODERS:
+        raise ValueError(f"unknown decoder {name!r}; known: "
+                         f"{sorted(DECODERS)}")
+    if name == "early_exit":
+        if gen is None:
+            return EarlyExitDecoder()
+        return EarlyExitDecoder(threshold=gen.exit_threshold,
+                                patience=gen.exit_patience,
+                                min_layers=gen.exit_min_layers)
+    if name == "speculative":
+        if gen is None:
+            return SpeculativeDecoder(draft, d_params)
+        return SpeculativeDecoder(draft, d_params, gamma=gen.gamma,
+                                  lantern_k=gen.lantern_k,
+                                  lantern_delta=gen.lantern_delta)
+    return DECODERS[name]()

@@ -1,0 +1,120 @@
+"""Unified generation config for the ``repro.api`` facade.
+
+``GenerationConfig`` absorbs the knobs that used to be scattered across
+``EngineConfig`` (temperature / eos / max_new_tokens), the
+``speculative_generate`` signature (gamma / LANTERN), and
+``early_exit_decode_step`` (threshold / patience / min_layers), plus NAMED
+compression presets so an EffiVLM-BENCH-style sweep is a one-line loop:
+
+    for preset in ("none", "fastv-0.5", "divprune-0.5", "streaming-kv"):
+        lvlm.generate(prompts, GenerationConfig(compression=preset))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from repro.configs.base import CompressionConfig
+from repro.core.token_compression import PRUNERS
+
+DECODER_NAMES = ("greedy", "sampling", "speculative", "early_exit")
+
+# mergers accepted by CompressionConfig.token_merger (policy.py dispatch)
+_MERGERS = ("tome", "framefusion")
+
+#: Named compression presets (taxonomy dims 1 and 2a). Parametric names of
+#: the form "<pruner|merger>-<keep_ratio>" (e.g. "fastv-0.25") also resolve.
+COMPRESSION_PRESETS = {
+    "none": CompressionConfig(),
+    # dim 1: visual token pruning / merging before prefill
+    "fastv-0.5": CompressionConfig(token_pruner="fastv", keep_ratio=0.5),
+    "divprune-0.5": CompressionConfig(token_pruner="divprune",
+                                      keep_ratio=0.5),
+    "cdpruner-0.5": CompressionConfig(token_pruner="cdpruner",
+                                      keep_ratio=0.5),
+    "tome-0.5": CompressionConfig(token_merger="tome", keep_ratio=0.5),
+    # dim 2a: live KV-cache compaction in the engine (attention-free
+    # selectors; attention-score selectors stay library-level)
+    "streaming-kv": CompressionConfig(kv_selector="streaming", kv_budget=64),
+    "l2-kv": CompressionConfig(kv_selector="l2", kv_budget=64),
+}
+
+
+# KV selectors the engine can run live (attention-free; survey §V)
+_LIVE_KV_SELECTORS = ("streaming", "l2")
+
+
+def resolve_compression(
+        spec: Union[str, CompressionConfig, None]) -> CompressionConfig:
+    """Resolve a preset name / parametric name / explicit config.
+
+    Parametric grammars beyond the preset table:
+      "<pruner|merger>-<keep>"      e.g. "fastv-0.25", "tome-0.75"
+      "<selector>-kv-<budget>"      e.g. "streaming-kv-128", "l2-kv-256"
+    """
+    if spec is None:
+        return CompressionConfig()
+    if isinstance(spec, CompressionConfig):
+        return spec
+    if spec in COMPRESSION_PRESETS:
+        return COMPRESSION_PRESETS[spec]
+    head, sep, tail = spec.rpartition("-")
+    if sep:
+        for sel in _LIVE_KV_SELECTORS:
+            if head == f"{sel}-kv" and tail.isdigit() and int(tail) > 0:
+                return CompressionConfig(kv_selector=sel,
+                                         kv_budget=int(tail))
+        try:
+            keep = float(tail)
+        except ValueError:
+            keep = None
+        if keep is not None and 0.0 < keep <= 1.0:
+            if head in PRUNERS:
+                return CompressionConfig(token_pruner=head, keep_ratio=keep)
+            if head in _MERGERS:
+                return CompressionConfig(token_merger=head, keep_ratio=keep)
+    known = (sorted(COMPRESSION_PRESETS)
+             + [f"<{p}>-<keep>"
+                for p in sorted(list(PRUNERS) + list(_MERGERS))]
+             + [f"<{s}>-kv-<budget>" for s in _LIVE_KV_SELECTORS])
+    raise ValueError(f"unknown compression preset {spec!r}; known: {known}")
+
+
+@dataclasses.dataclass
+class GenerationConfig:
+    """Everything ``LVLM.generate`` needs beyond the prompts themselves."""
+    max_new_tokens: int = 32
+    decoder: str = "greedy"          # greedy | sampling | speculative | early_exit
+    # sampling warp (ignored by the greedy decoder)
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 0.0
+    eos_id: int = -1                 # -1 = never stop on eos
+    seed: int = 0
+    # taxonomy dims 1 / 2a: preset name, parametric name, or explicit config
+    compression: Union[str, CompressionConfig] = "none"
+    # speculative decoding (dim 4a); the draft model itself is passed to
+    # generate(..., draft=...) -- None means self-draft (acceptance upper
+    # bound; useful for exactness checks and wiring tests)
+    gamma: int = 4
+    lantern_k: int = 0               # >1 enables LANTERN relaxed acceptance
+    lantern_delta: float = 0.2
+    # early exit (dim 4b)
+    exit_threshold: float = 0.9
+    exit_patience: int = 2
+    exit_min_layers: int = 2
+
+    def __post_init__(self):
+        if self.decoder not in DECODER_NAMES:
+            raise ValueError(f"unknown decoder {self.decoder!r}; "
+                             f"known: {DECODER_NAMES}")
+
+    @property
+    def effective_temperature(self) -> float:
+        return 0.0 if self.decoder == "greedy" else self.temperature
+
+    def resolved_compression(self) -> CompressionConfig:
+        return resolve_compression(self.compression)
+
+    def with_(self, **kw) -> "GenerationConfig":
+        return dataclasses.replace(self, **kw)

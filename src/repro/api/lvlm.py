@@ -1,0 +1,241 @@
+"""``LVLM``: the single public inference facade.
+
+Wraps the whole config -> build -> param init/restore -> engine pipeline the
+way vLLM's ``LLM`` / SGLang's runtime front their engines:
+
+    from repro.api import LVLM, GenerationConfig
+
+    lvlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+    out = lvlm.generate(prompt_tokens,
+                        GenerationConfig(decoder="greedy", max_new_tokens=16,
+                                         compression="fastv-0.5"))
+    for tok in lvlm.generate_stream(prompt_tokens):   # per-token iterator
+        ...
+    report = lvlm.serve(requests, EngineConfig(scheduler="chunked"))
+
+Every decode strategy (greedy / sampling / speculative / early_exit) runs
+through the SAME engine + decoder-hook path, so compression presets,
+schedulers, and the virtual-clock metrics compose with all of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.api.decoders import make_decoder
+from repro.api.generation import GenerationConfig, resolve_compression
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.serving import Engine, EngineConfig, Request
+from repro.models.registry import build
+
+Prompt = Sequence[int]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """One prompt's continuation plus run-level stats."""
+    tokens: List[int]                 # generated token ids
+    prompt_len: int                   # text tokens (visual not included)
+    decoder: str
+    stats: Dict                       # engine summary + decoder counters
+    request: Request                  # full lifecycle record (ttft/jct/...)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Outcome of a full serving run (scheduler metrics + raw requests)."""
+    stats: Dict
+    requests: List[Request]
+    engine: Engine
+
+
+def _is_single_prompt(prompts) -> bool:
+    return len(prompts) > 0 and not hasattr(prompts[0], "__len__")
+
+
+class LVLM:
+    """Facade over (model, params); see module docstring."""
+
+    def __init__(self, model, params):
+        self.model = model
+        self.params = params
+
+    # ---------------------------------------------------------- factory --
+    @classmethod
+    def from_pretrained(cls, arch: str, *, smoke: bool = False,
+                        seed: int = 0, checkpoint: Optional[str] = None,
+                        **overrides) -> "LVLM":
+        """config -> build -> param init (or checkpoint restore).
+
+        ``overrides`` are ``ModelConfig.with_`` fields, e.g.
+        ``LVLM.from_pretrained("qwen2-vl-2b", smoke=True, vocab_size=512)``.
+        """
+        cfg = get_config(arch, smoke=smoke)
+        if overrides:
+            cfg = cfg.with_(**overrides)
+        model = build(cfg)
+        if checkpoint is not None:
+            from repro.training.checkpoint import load_checkpoint
+            params, _step = load_checkpoint(checkpoint)
+        else:
+            params = model.init(jax.random.PRNGKey(seed))
+        return cls(model, params)
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, *, seed: int = 0) -> "LVLM":
+        model = build(cfg)
+        return cls(model, model.init(jax.random.PRNGKey(seed)))
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.model.cfg
+
+    def with_params(self, params) -> "LVLM":
+        """Same architecture, new weights (e.g. after training)."""
+        return LVLM(self.model, params)
+
+    # ----------------------------------------------------------- engine --
+    def _build_engine(self, gen: GenerationConfig, *, max_batch: int,
+                      cache_len: int, draft: Optional["LVLM"] = None,
+                      engine_cfg: Optional[EngineConfig] = None) -> Engine:
+        batch1 = gen.decoder in ("speculative", "early_exit")
+        if engine_cfg is None:
+            engine_cfg = EngineConfig(
+                max_batch=1 if batch1 else max_batch,
+                cache_len=cache_len, scheduler="continuous")
+        # generation knobs always come from gen; engine_cfg keeps only the
+        # serving-layer knobs (batch, cache, scheduler, prefix cache, cost)
+        engine_cfg = dataclasses.replace(
+            engine_cfg,
+            max_batch=1 if batch1 else engine_cfg.max_batch,
+            temperature=gen.effective_temperature,
+            top_k=gen.top_k, top_p=gen.top_p,
+            eos_id=gen.eos_id, seed=gen.seed,
+            decoder=gen.decoder,
+            compression=gen.resolved_compression())
+        decoder = None
+        if gen.decoder in ("speculative", "early_exit"):
+            decoder = make_decoder(
+                gen.decoder, gen,
+                draft=None if draft is None else draft.model,
+                d_params=None if draft is None else draft.params)
+        return Engine(self.model, self.params, engine_cfg, decoder=decoder)
+
+    def _requests(self, prompts, gen, visual_embeds) -> List[Request]:
+        n = len(prompts)
+        if visual_embeds is None:
+            ves: List[Optional[np.ndarray]] = [None] * n
+        elif isinstance(visual_embeds, (list, tuple)):
+            ves = list(visual_embeds)
+        else:                                      # one array, one prompt
+            ves = [np.asarray(visual_embeds)]
+        if len(ves) != n:
+            raise ValueError(f"{n} prompts but {len(ves)} visual_embeds")
+        return [Request(rid=i, tokens=[int(t) for t in p],
+                        max_new_tokens=gen.max_new_tokens,
+                        visual_embeds=ve)
+                for i, (p, ve) in enumerate(zip(prompts, ves))]
+
+    @staticmethod
+    def _cache_len(reqs: List[Request], gen: GenerationConfig) -> int:
+        if not reqs:
+            raise ValueError("generate() needs at least one prompt")
+        margin = 2 + (gen.gamma if gen.decoder == "speculative" else 0)
+        need = max(r.prompt_len + r.max_new_tokens for r in reqs) + margin
+        return -(-need // 16) * 16                 # round up to x16
+
+    # --------------------------------------------------------- generate --
+    def generate(self, prompts, gen: Optional[GenerationConfig] = None, *,
+                 visual_embeds=None, draft: Optional["LVLM"] = None,
+                 engine_cfg: Optional[EngineConfig] = None
+                 ) -> Union[GenerationResult, List[GenerationResult]]:
+        """Generate continuations with any decoder strategy.
+
+        ``prompts``: one token-id sequence or a list of them (a single
+        prompt returns a single ``GenerationResult``). ``visual_embeds``:
+        one [Nv, d] array (single prompt) or a list parallel to ``prompts``.
+        ``draft``: an ``LVLM`` used as the speculative draft model (None ->
+        self-draft).
+        """
+        gen = gen if gen is not None else GenerationConfig()
+        single = _is_single_prompt(prompts)
+        if single:
+            prompts = [prompts]
+        reqs = self._requests(prompts, gen, visual_embeds)
+        eng = self._build_engine(
+            gen, max_batch=min(8, max(1, len(reqs))),
+            cache_len=self._cache_len(reqs, gen), draft=draft,
+            engine_cfg=engine_cfg)
+        for r in reqs:
+            eng.submit(r)
+        run_stats = eng.run()
+        stats = dict(run_stats, **eng.decoder.stats())
+        results = [GenerationResult(tokens=list(r.generated),
+                                    prompt_len=len(r.tokens),
+                                    decoder=gen.decoder, stats=stats,
+                                    request=r)
+                   for r in reqs]
+        return results[0] if single else results
+
+    def generate_stream(self, prompt: Prompt,
+                        gen: Optional[GenerationConfig] = None, *,
+                        visual_embeds=None, draft: Optional["LVLM"] = None
+                        ) -> Iterator[int]:
+        """Per-token iterator over one prompt's continuation (any decoder).
+
+        Tokens are yielded as the engine emits them -- speculative rounds
+        surface several at once, which is exactly the technique's point.
+        """
+        gen = gen if gen is not None else GenerationConfig()
+        reqs = self._requests([prompt], gen,
+                              None if visual_embeds is None
+                              else [np.asarray(visual_embeds)])
+        eng = self._build_engine(gen, max_batch=1,
+                                 cache_len=self._cache_len(reqs, gen),
+                                 draft=draft)
+        req = reqs[0]
+        eng.submit(req)
+        served = 0
+        while eng.step():
+            while served < len(req.generated):
+                yield req.generated[served]
+                served += 1
+        while served < len(req.generated):
+            yield req.generated[served]
+            served += 1
+
+    # ------------------------------------------------------------ serve --
+    def serve(self, requests: List[Request],
+              engine_cfg: Optional[EngineConfig] = None,
+              gen: Optional[GenerationConfig] = None,
+              draft: Optional["LVLM"] = None) -> ServeResult:
+        """Full serving run: scheduler + batching + virtual-clock metrics.
+
+        ``engine_cfg`` keeps its internal-layer knobs (scheduler, batch,
+        prefix cache, ...); ``gen`` optionally selects the decoder strategy
+        and compression preset on top.
+        """
+        ec = engine_cfg if engine_cfg is not None else EngineConfig()
+        decoder = None
+        if gen is not None:
+            ec = dataclasses.replace(
+                ec, decoder=gen.decoder,
+                temperature=gen.effective_temperature,
+                top_k=gen.top_k, top_p=gen.top_p, eos_id=gen.eos_id,
+                compression=gen.resolved_compression())
+            if gen.decoder in ("speculative", "early_exit"):
+                ec = dataclasses.replace(ec, max_batch=1)
+                decoder = make_decoder(
+                    gen.decoder, gen,
+                    draft=None if draft is None else draft.model,
+                    d_params=None if draft is None else draft.params)
+        eng = Engine(self.model, self.params, ec, decoder=decoder)
+        for r in requests:
+            eng.submit(r)
+        stats = dict(eng.run(), **eng.decoder.stats())
+        return ServeResult(stats=stats, requests=list(eng.finished),
+                           engine=eng)

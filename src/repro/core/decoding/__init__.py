@@ -1,6 +1,15 @@
+"""Internal decoding layer (sampling, speculative, early exit).
+
+DEPRECATION NOTE: these drivers stay importable as the internal layer, but
+the public entry point is now ``repro.api`` -- all four decode strategies
+(greedy / sampling / speculative / early_exit) run behind
+``LVLM.generate(prompts, GenerationConfig(decoder=...))``.
+"""
 from repro.core.decoding.sampling import (
-    sample_token, greedy, temperature_sample, top_k_sample, top_p_sample)
+    sample_token, sample_probs, greedy, temperature_sample, top_k_sample,
+    top_p_sample)
 from repro.core.decoding.speculative import (
-    SpecStats, speculative_generate, acceptance_rate)
+    SpecStats, speculative_generate, acceptance_rate, draft_block,
+    accept_block, lantern_neighbourhood_from_params)
 from repro.core.decoding.early_exit import (
     early_exit_decode_step, layer_confidences)

@@ -71,6 +71,112 @@ def _lantern_neighbourhood(embed_w: np.ndarray, k: int):
     return np.argsort(-sims, axis=1)[:, :k]        # [V, k], col 0 == self
 
 
+def lantern_neighbourhood_from_params(t_params, k: int):
+    """Build the LANTERN kNN table from a target param tree (embed/unembed)."""
+    ew = t_params["embed"]
+    w = ew["unembed"].T if "unembed" in ew else ew["tok"]
+    return _lantern_neighbourhood(np.asarray(w, np.float32), k)
+
+
+def draft_block(d_extend, d_decode, d_params, d_cache, lead_toks, start, *,
+                gamma: int, temperature: float, key,
+                stats: Optional[SpecStats] = None):
+    """Draft ``gamma`` tokens autoregressively.
+
+    ``lead_toks`` (list[int], len >= 1) are the committed tokens the draft
+    cache has not scored yet, ending with the current last token; they are
+    scored in ONE ``extend`` at position ``start`` before drafting begins.
+    The lead is how the caller back-fills the draft-cache hole left by a
+    fully-accepted block: the last accepted draft token was proposed but
+    never written to the draft's KV cache, so the next round must replay it
+    (target and draft caches stay position-consistent).
+
+    Returns (draft_toks, draft_ps, d_cache, key). Shared by the standalone
+    ``speculative_generate`` driver and the engine-side decoder strategy in
+    ``repro.api.decoders`` so both follow the same proposal distribution.
+    """
+    draft_toks, draft_ps = [], []
+    cur = jnp.asarray([lead_toks], jnp.int32)          # [1, k]
+    d_len = start + len(lead_toks)
+    for g in range(gamma):
+        if g == 0:
+            lg, d_cache = d_extend(d_params, d_cache, cur, jnp.int32(start))
+            lg = lg[:, -1]
+        else:
+            lg, d_cache = d_decode(d_params, d_cache, cur,
+                                   jnp.int32(d_len - 1))
+        if stats is not None:
+            stats.draft_calls += 1
+        pd = sample_probs(lg, temperature=temperature)
+        key, kk = jax.random.split(key)
+        nxt = (jnp.argmax(pd, -1) if temperature <= 0
+               else jax.random.categorical(kk, jnp.log(pd + 1e-30))
+               ).astype(jnp.int32)
+        draft_toks.append(int(nxt[0]))
+        draft_ps.append(pd[0])
+        cur = nxt[:, None]
+        d_len += 1
+    return draft_toks, draft_ps, d_cache, key
+
+
+def accept_block(key, t_logits, draft_toks, draft_ps, *, temperature: float,
+                 limit: int, nbhd=None, lantern_delta: float = 0.2):
+    """Leviathan/Chen acceptance (+ optional LANTERN relaxation) over ONE
+    verified block.
+
+    ``t_logits`` [1, gamma+1, V] are the target logits for
+    [committed_tok, draft_0, ..., draft_{gamma-1}]; ``limit`` caps how many
+    tokens this round may emit. Returns (emitted, n_accepted, bonus, key):
+    ``emitted`` lists the round's output tokens (accepted drafts plus either
+    the rejection resample or the whole-block bonus token).
+    """
+    gamma = len(draft_toks)
+    emitted = []
+    n_acc = 0
+    emitted_reject = False
+    for g in range(gamma):
+        pt = sample_probs(t_logits[:, g], temperature=temperature)[0]
+        pd = draft_ps[g]
+        x = draft_toks[g]
+        p_acc_num = float(pt[x])
+        if nbhd is not None:
+            # LANTERN: aggregate target mass over the latent
+            # neighbourhood of x, capped by the TV budget delta
+            extra = float(jnp.sum(pt[nbhd[x]])) - float(pt[x])
+            p_acc_num = min(p_acc_num + max(extra, 0.0),
+                            p_acc_num + lantern_delta)
+        ratio = p_acc_num / max(float(pd[x]), 1e-30)
+        key, ku = jax.random.split(key)
+        u = float(jax.random.uniform(ku)) if temperature > 0 else 0.5
+        if ratio >= 1.0 or u < ratio:
+            n_acc += 1
+            emitted.append(x)
+            if len(emitted) >= limit:
+                break
+        else:
+            # rejection: resample from norm(max(0, p_t - p_d))
+            resid = jnp.clip(pt - pd, 0.0)
+            tot = float(jnp.sum(resid))
+            if tot <= 1e-9:
+                resid = pt
+                tot = float(jnp.sum(resid))
+            key, kr = jax.random.split(key)
+            emitted.append(int(jax.random.categorical(
+                kr, jnp.log(resid / tot + 1e-30))))
+            emitted_reject = True
+            break
+    bonus = False
+    if not emitted_reject and len(emitted) < limit and n_acc == gamma:
+        # whole block accepted: bonus token from the last target logits
+        pt = sample_probs(t_logits[:, gamma], temperature=temperature)[0]
+        key, kb = jax.random.split(key)
+        y = (int(jnp.argmax(pt)) if temperature <= 0
+             else int(jax.random.categorical(kb, jnp.log(pt + 1e-30))))
+        emitted.append(y)
+        bonus = True
+    return emitted, n_acc, bonus, key
+
+
 def speculative_generate(target, draft, t_params, d_params, prompt,
                          *, max_new_tokens: int, gamma: int = 4,
                          temperature: float = 0.0,
@@ -109,16 +215,11 @@ def speculative_generate(target, draft, t_params, d_params, prompt,
 
     nbhd = None
     if lantern_k > 1:
-        ew = t_params["embed"]
-        w = ew["unembed"].T if "unembed" in ew else ew["tok"]
-        nbhd = _lantern_neighbourhood(np.asarray(w, np.float32), lantern_k)
-
-    def probs(logits):
-        return sample_probs(logits, temperature=temperature)
+        nbhd = lantern_neighbourhood_from_params(t_params, lantern_k)
 
     out = []
     # sample the first token from the prefill logits
-    p0 = probs(t_logits[:, -1])
+    p0 = sample_probs(t_logits[:, -1], temperature=temperature)
     key, k0 = jax.random.split(key)
     tok = (jnp.argmax(p0, -1) if temperature <= 0
            else jax.random.categorical(k0, jnp.log(p0 + 1e-30))).astype(
@@ -126,29 +227,17 @@ def speculative_generate(target, draft, t_params, d_params, prompt,
     out.append(int(tok[0]))
 
     t_len = s          # text tokens scored so far (target pos = nv + t_len)
-    d_len = s
+    d_valid = s        # draft-cache committed prefix (see draft_block lead)
     while len(out) < max_new_tokens:
         # --- draft gamma tokens autoregressively -----------------------
-        draft_toks, draft_ps = [], []
-        cur = tok[:, None]
-        for g in range(gamma):
-            if g == 0:
-                lg, d_cache = d_extend(d_params, d_cache, cur,
-                                       jnp.int32(d_len))
-                lg = lg[:, -1]
-            else:
-                lg, d_cache = d_decode(d_params, d_cache, cur,
-                                       jnp.int32(d_len))
-            stats.draft_calls += 1
-            d_len += 1
-            pd = probs(lg)
-            key, kk = jax.random.split(key)
-            nxt = (jnp.argmax(pd, -1) if temperature <= 0
-                   else jax.random.categorical(kk, jnp.log(pd + 1e-30))
-                   ).astype(jnp.int32)
-            draft_toks.append(int(nxt[0]))
-            draft_ps.append(pd[0])
-            cur = nxt[:, None]
+        # (draft cache rollback is implicit: drafting restarts from the
+        # target's committed length t_len each round; the lead replays any
+        # committed tokens the draft cache is missing)
+        committed = prompt[0].tolist() + out      # text stream, pos i
+        lead = committed[d_valid:t_len + 1]
+        draft_toks, draft_ps, d_cache, key = draft_block(
+            d_extend, d_decode, d_params, d_cache, lead, d_valid,
+            gamma=gamma, temperature=temperature, key=key, stats=stats)
 
         # --- verify: ONE target pass over [tok, draft block] -----------
         block = jnp.asarray([int(tok[0])] + draft_toks, jnp.int32)[None]
@@ -157,56 +246,19 @@ def speculative_generate(target, draft, t_params, d_params, prompt,
         stats.target_calls += 1
         stats.proposed += gamma
 
-        n_acc = 0
-        emitted_reject = False
-        for g in range(gamma):
-            pt = probs(t_logits[:, g])[0]
-            pd = draft_ps[g]
-            x = draft_toks[g]
-            p_acc_num = float(pt[x])
-            if nbhd is not None:
-                # LANTERN: aggregate target mass over the latent
-                # neighbourhood of x, capped by the TV budget delta
-                extra = float(jnp.sum(pt[nbhd[x]])) - float(pt[x])
-                p_acc_num = min(p_acc_num + max(extra, 0.0),
-                                p_acc_num + lantern_delta)
-            ratio = p_acc_num / max(float(pd[x]), 1e-30)
-            key, ku = jax.random.split(key)
-            u = float(jax.random.uniform(ku)) if temperature > 0 else 0.5
-            if ratio >= 1.0 or u < ratio:
-                n_acc += 1
-                out.append(x)
-                if len(out) >= max_new_tokens:
-                    break
-            else:
-                # rejection: resample from norm(max(0, p_t - p_d))
-                resid = jnp.clip(pt - pd, 0.0)
-                tot = float(jnp.sum(resid))
-                if tot <= 1e-9:
-                    resid = pt
-                    tot = float(jnp.sum(resid))
-                key, kr = jax.random.split(key)
-                y = int(jax.random.categorical(
-                    kr, jnp.log(resid / tot + 1e-30)))
-                out.append(y)
-                emitted_reject = True
-                break
+        emitted, n_acc, bonus, key = accept_block(
+            key, t_logits, draft_toks, draft_ps, temperature=temperature,
+            limit=max_new_tokens - len(out), nbhd=nbhd,
+            lantern_delta=lantern_delta)
+        out.extend(emitted)
         stats.accepted += n_acc
-
-        if not emitted_reject and len(out) < max_new_tokens and n_acc == gamma:
-            # whole block accepted: bonus token from the last target logits
-            pt = probs(t_logits[:, gamma])[0]
-            key, kb = jax.random.split(key)
-            y = (int(jnp.argmax(pt)) if temperature <= 0
-                 else int(jax.random.categorical(kb, jnp.log(pt + 1e-30))))
-            out.append(y)
-            stats.bonus += 1
+        stats.bonus += int(bonus)
 
         t_len += 1 + n_acc          # target consumed tok + accepted drafts
-        # draft cache rollback: rewind logical length to the target's
-        d_len = t_len
+        # draft cache holds committed tokens through t_len-1, EXCEPT after a
+        # whole-block accept: the last accepted draft was proposed, never
+        # written -- the next round's lead replays it
+        d_valid = t_len - (1 if (gamma > 0 and n_acc == gamma) else 0)
         tok = jnp.asarray([out[-1]], jnp.int32)
-        if len(out) >= max_new_tokens:
-            break
 
     return out[:max_new_tokens], stats

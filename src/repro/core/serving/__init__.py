@@ -1,3 +1,10 @@
+"""Internal serving layer (engine, schedulers, requests, disaggregation).
+
+DEPRECATION NOTE: these names stay importable as the internal layer, but the
+public entry point is now ``repro.api`` (``LVLM`` / ``GenerationConfig`` /
+``EngineConfig``) -- prefer ``LVLM.serve(...)`` over wiring ``Engine``
+by hand.
+"""
 from repro.core.serving.request import Request, SLO, State, summarize
 from repro.core.serving.scheduler import (
     SCHEDULERS, IterationPlan, StaticBatcher, ContinuousBatcher,
@@ -5,4 +12,5 @@ from repro.core.serving.scheduler import (
 from repro.core.serving.disaggregation import (
     CostModel, PoolConfig, simulate_disaggregated, simulate_colocated,
     goodput)
-from repro.core.serving.engine import Engine, EngineConfig
+from repro.core.serving.engine import (
+    Engine, EngineConfig, SamplingEngineDecoder)

@@ -16,8 +16,15 @@ scheduler.py, with the taxonomy dimensions as config switches:
          reuse backed by host snapshots of the dense slot cache.
   dim 2c scheduling                -- static | continuous | mlfq | chunked
          (chunked prefill runs real ``model.extend`` chunk continuation).
-  dim 4  decoding                  -- sampling config; speculative decoding
-         and early exit have dedicated drivers in core/decoding.
+  dim 4  decoding                  -- pluggable ``Decoder`` strategies: the
+         per-iteration token emission is a hook (``decoder.engine_decode``)
+         so greedy/sampling (any batch) and speculative / early-exit
+         (batch-1 introspection paths, adapters in ``repro.api.decoders``)
+         all run behind one interface; the standalone drivers in
+         core/decoding remain the library layer.
+
+NOTE: ``repro.api`` (``LVLM`` / ``GenerationConfig``) is the public surface;
+construct ``Engine`` directly only for internal-layer control.
 
 Time is a virtual clock advanced by an analytic per-iteration cost model, so
 TTFT/TPOT/JCT metrics are deterministic and hardware-independent (the
@@ -50,13 +57,76 @@ class EngineConfig:
     chunk_size: int = 32                 # chunked-prefill chunk
     token_budget: int = 128              # chunked-prefill per-iter budget
     temperature: float = 0.0
+    top_k: int = 0                       # 0 = no top-k warp
+    top_p: float = 0.0                   # 0 = no nucleus warp
     eos_id: int = -1                     # -1 = never stop on eos
     seed: int = 0
+    decoder: str = "sampling"            # sampling|greedy|speculative|early_exit
+    #   (speculative/early_exit resolve via repro.api.decoders; an explicit
+    #    Decoder instance passed to Engine(..., decoder=) takes precedence)
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     prefix_cache: bool = False
     prefix_block: int = 16               # reuse granularity (tokens)
     cost: CostModel = dataclasses.field(default_factory=CostModel)
+
+
+class SamplingEngineDecoder:
+    """Default decoder hook: one fixed-shape jitted decode step over the
+    whole slot pool, then temperature/top-k/top-p sampling (dim 4 baseline).
+
+    The hook contract (duck-typed; richer adapters live in
+    ``repro.api.decoders``):
+
+      engine_decode(engine, reqs) -> {slot: [emitted tokens]}
+
+    The decoder owns the forward pass AND the slot bookkeeping
+    (``pool`` / ``slot_pos`` / ``slot_last_tok``); the engine handles
+    request bookkeeping (generated, eos, DONE) from the emitted map.
+    An optional ``validate(engine)`` runs once at Engine construction.
+    """
+    name = "sampling"
+
+    def __init__(self, greedy: bool = False):
+        self.greedy = greedy
+
+    def stats(self) -> Dict:
+        return {}
+
+    def engine_decode(self, eng: "Engine", reqs: List[Request]) -> Dict:
+        ec = eng.ec
+        toks = np.zeros((ec.max_batch, 1), np.int32)
+        # fixed-shape decode runs EVERY slot; inactive slots (empty or
+        # mid-prefill) must not corrupt real cache entries, so their write
+        # lands on the reserved scratch position cache_len-1 (requests are
+        # capacity-checked to never reach it).
+        pos = np.full(ec.max_batch, ec.cache_len - 1, np.int32)
+        for r in reqs:
+            toks[r._slot, 0] = eng.slot_last_tok[r._slot]
+            pos[r._slot] = eng.slot_pos[r._slot]
+        logits, eng.pool = eng._jit_decode(
+            eng.params, eng.pool, jnp.asarray(toks), jnp.asarray(pos))
+        eng.key, k1 = jax.random.split(eng.key)
+        temp = 0.0 if self.greedy else ec.temperature
+        nxt = np.asarray(sample_token(k1, logits, temperature=temp,
+                                      top_k=ec.top_k, top_p=ec.top_p))
+        emitted: Dict[int, List[int]] = {}
+        for r in reqs:
+            s = r._slot
+            tok = int(nxt[s])
+            eng.slot_last_tok[s] = tok
+            eng.slot_pos[s] += 1
+            emitted[s] = [tok]
+        return emitted
+
+
+def _make_default_decoder(name: str):
+    if name in ("sampling", "greedy"):
+        return SamplingEngineDecoder(greedy=(name == "greedy"))
+    # strategy adapters live one layer up; resolve lazily to keep
+    # repro.core importable without repro.api
+    from repro.api.decoders import make_decoder
+    return make_decoder(name)
 
 
 def _slot_get(pool, slot):
@@ -69,7 +139,7 @@ def _slot_set(pool, slot, one):
 
 
 class Engine:
-    def __init__(self, model, params, ec: EngineConfig):
+    def __init__(self, model, params, ec: EngineConfig, *, decoder=None):
         cfg = model.cfg
         self.ec = ec
         self.params = params
@@ -128,6 +198,12 @@ class Engine:
         self._jit_extend = jax.jit(self.model.extend)
         self._jit_decode = jax.jit(
             partial(self.model.decode_step, windowed=self.windowed))
+
+        self.decoder = decoder if decoder is not None \
+            else _make_default_decoder(ec.decoder)
+        validate = getattr(self.decoder, "validate", None)
+        if validate is not None:
+            validate(self)
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
@@ -241,8 +317,10 @@ class Engine:
             if self.compacting and ec.compression.kv_budget:
                 self._compact_slot(slot)
             self.key, k1 = jax.random.split(self.key)
-            tok = int(sample_token(k1, logits[:, -1],
-                                   temperature=ec.temperature)[0])
+            temp = 0.0 if getattr(self.decoder, "greedy", False) \
+                else ec.temperature
+            tok = int(sample_token(k1, logits[:, -1], temperature=temp,
+                                   top_k=ec.top_k, top_p=ec.top_p)[0])
             req.generated.append(tok)
             req._needs_ttft = True
             self.slot_last_tok[slot] = tok
@@ -293,30 +371,20 @@ class Engine:
 
     # ------------------------------------------------------------- decode --
     def _decode_iteration(self, reqs: List[Request]) -> None:
-        ec = self.ec
-        toks = np.zeros((ec.max_batch, 1), np.int32)
-        # fixed-shape decode runs EVERY slot; inactive slots (empty or
-        # mid-prefill) must not corrupt real cache entries, so their write
-        # lands on the reserved scratch position cache_len-1 (requests are
-        # capacity-checked to never reach it).
-        pos = np.full(ec.max_batch, ec.cache_len - 1, np.int32)
+        """One decode iteration through the pluggable decoder hook.
+
+        The decoder runs the forward pass(es) and slot bookkeeping and may
+        emit MULTIPLE tokens per request per iteration (speculative); the
+        engine applies request bookkeeping and stop conditions.
+        """
+        emitted = self.decoder.engine_decode(self, reqs)
         for r in reqs:
-            toks[r._slot, 0] = self.slot_last_tok[r._slot]
-            pos[r._slot] = self.slot_pos[r._slot]
-        logits, self.pool = self._jit_decode(
-            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos))
-        self.key, k1 = jax.random.split(self.key)
-        nxt = np.asarray(sample_token(k1, logits,
-                                      temperature=ec.temperature))
-        for r in reqs:
-            s = r._slot
-            tok = int(nxt[s])
-            r.generated.append(tok)
-            r.served_tokens += 1
-            self.slot_last_tok[s] = tok
-            self.slot_pos[s] += 1
-            if r.is_finished() or tok == ec.eos_id:
-                r.state = State.DONE
+            for tok in emitted.get(r._slot, ()):
+                r.generated.append(tok)
+                r.served_tokens += 1
+                if r.is_finished() or tok == self.ec.eos_id:
+                    r.state = State.DONE
+                    break
 
     # --------------------------------------------------------------- step --
     def step(self) -> bool:
@@ -335,6 +403,7 @@ class Engine:
         for req, n in plan.prefill:
             self._do_prefill_chunk(req, n)
         decode_reqs = [r for r in plan.decode if r.state == State.DECODE]
+        self._iter_decode_cost = None     # decoders may report their true cost
         if decode_reqs:
             self._decode_iteration(decode_reqs)
         # virtual clock
@@ -343,7 +412,9 @@ class Engine:
         dt = self.ec.cost.prefill_time(plan.prefill_tokens
                                        + self._iter_visual_tokens)
         if decode_reqs:
-            dt += self.ec.cost.decode_step_time(len(decode_reqs), ctx)
+            dt += (self._iter_decode_cost if self._iter_decode_cost
+                   is not None
+                   else self.ec.cost.decode_step_time(len(decode_reqs), ctx))
         self.clock += dt
         self.iters += 1
         # stamp times & retire

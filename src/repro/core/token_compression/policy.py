@@ -38,6 +38,11 @@ def compress_visual_tokens(cc: CompressionConfig, embeds, *,
 
     if cc.token_pruner == "none":
         return embeds, None, {"keep": n, "method": "none"}
+    if cc.token_pruner == "fastv" and scores is None:
+        # the scanned production path never materializes attention matrices
+        # (survey §V), so score-free callers (the engine) use the L2-norm
+        # salience proxy: low-norm keys receive high attention [L2Compress]
+        scores = -jnp.linalg.norm(embeds, axis=-1)
     fn = pruning.PRUNERS[cc.token_pruner]
     out, idx, info = fn(embeds, keep, scores=scores, query=query)
     return out, idx, {"keep": keep, "method": cc.token_pruner, **info}

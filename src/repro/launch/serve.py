@@ -1,20 +1,22 @@
-"""Serving driver: the taxonomy engine end-to-end on synthetic requests.
+"""Serving driver: the taxonomy engine end-to-end on synthetic requests,
+through the unified ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b --smoke \
-        --requests 16 --scheduler chunked --pruner divprune --keep 0.5
+        --requests 16 --scheduler chunked --compression divprune-0.5
+
+    # decoder strategies (speculative/early_exit run batch-1):
+    PYTHONPATH=src python -m repro.launch.serve --decoder speculative
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
 import numpy as np
 
-from repro.configs import ARCHS, get_config
-from repro.configs.base import CompressionConfig
-from repro.core.serving import Engine, EngineConfig, Request
-from repro.models.registry import build
+from repro.api import (EngineConfig, GenerationConfig, LVLM, Request,
+                       resolve_compression)
+from repro.configs import ARCHS
 
 
 def synth_requests(cfg, n, *, seed=0, prompt_lo=16, prompt_hi=48,
@@ -42,15 +44,20 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--scheduler", default="continuous",
                     choices=("static", "continuous", "mlfq", "chunked"))
+    ap.add_argument("--decoder", default="sampling",
+                    choices=("greedy", "sampling", "speculative",
+                             "early_exit"))
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--shared-prefix", type=int, default=0)
     ap.add_argument("--prefix-cache", action="store_true")
-    ap.add_argument("--pruner", default="none")
-    ap.add_argument("--keep", type=float, default=1.0)
-    ap.add_argument("--kv-selector", default="none")
-    ap.add_argument("--kv-budget", type=int, default=0)
+    ap.add_argument("--compression", default="none",
+                    help="preset name, e.g. none|fastv-0.5|divprune-0.5|"
+                         "streaming-kv; parametric: <pruner>-<keep> or "
+                         "<streaming|l2>-kv-<budget>")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="speculative draft length")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--dry-run", action="store_true",
                     help="lower/compile decode_32k under the production mesh")
@@ -65,23 +72,22 @@ def main() -> int:
              "--arch", args.arch, "--shape", "decode_32k"],
             env=dict(os.environ, PYTHONPATH="src"))
 
-    cfg = get_config(args.arch, smoke=True)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    lvlm = LVLM.from_pretrained(args.arch, smoke=True)
     ec = EngineConfig(
         max_batch=args.max_batch, cache_len=args.cache_len,
         scheduler=args.scheduler, temperature=args.temperature,
         prefix_cache=args.prefix_cache,
-        compression=CompressionConfig(
-            token_pruner=args.pruner, keep_ratio=args.keep,
-            kv_selector=args.kv_selector, kv_budget=args.kv_budget))
-    eng = Engine(model, params, ec)
-    for r in synth_requests(cfg, args.requests,
-                            new_tokens=args.new_tokens,
-                            shared_prefix=args.shared_prefix):
-        eng.submit(r)
-    out = eng.run()
-    print(json.dumps({k: v for k, v in out.items()
+        compression=resolve_compression(args.compression))
+    gen = GenerationConfig(
+        decoder=args.decoder, temperature=args.temperature,
+        max_new_tokens=args.new_tokens, gamma=args.gamma,
+        compression=args.compression)
+    report = lvlm.serve(
+        synth_requests(lvlm.cfg, args.requests,
+                       new_tokens=args.new_tokens,
+                       shared_prefix=args.shared_prefix),
+        engine_cfg=ec, gen=gen)
+    print(json.dumps({k: v for k, v in report.stats.items()
                       if not isinstance(v, (list, dict))}, indent=1,
                      default=float))
     return 0

@@ -1,0 +1,27 @@
+"""Version portability helpers for jax.sharding.
+
+``AbstractMesh``'s constructor changed across jax releases:
+
+  * jax >= 0.5:   AbstractMesh(axis_sizes, axis_names, ...)
+  * jax 0.4.3x:   AbstractMesh(((name, size), ...), ...)
+
+``abstract_mesh`` accepts the modern (sizes, names) form and dispatches to
+whichever signature the installed jax understands.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+from jax.sharding import AbstractMesh
+
+
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Sequence[str]) -> AbstractMesh:
+    sizes: Tuple[int, ...] = tuple(axis_sizes)
+    names: Tuple[str, ...] = tuple(axis_names)
+    if len(sizes) != len(names):
+        raise ValueError(f"{len(sizes)} sizes vs {len(names)} names")
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))

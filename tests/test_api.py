@@ -1,0 +1,183 @@
+"""The unified ``repro.api`` facade: LVLM + GenerationConfig + decoders.
+
+Covers the acceptance contract of the facade refactor:
+  * ``from_pretrained`` wraps config -> build -> init (+ overrides),
+  * all four decoder strategies run through ONE ``generate()`` signature,
+  * greedy facade output is token-identical to direct ``Engine.run`` wiring
+    (no behavior drift from the refactor),
+  * named compression presets resolve and run end-to-end,
+  * ``generate_stream`` and ``serve`` agree with ``generate``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (COMPRESSION_PRESETS, CompressionConfig, EngineConfig,
+                       GenerationConfig, LVLM, Request, resolve_compression)
+from repro.configs import get_config
+from repro.core.serving import Engine
+
+
+@pytest.fixture(scope="module")
+def lvlm():
+    return LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    return LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.RandomState(0)
+    return [list(rng.randint(1, 512, size=n)) for n in (12, 8, 15)]
+
+
+def test_from_pretrained_builds_and_overrides():
+    m = LVLM.from_pretrained("phi4-mini-3.8b", smoke=True, vocab_size=256)
+    assert m.cfg.vocab_size == 256
+    assert m.cfg.family == "dense"
+    assert m.params is not None
+    m2 = m.with_params(m.params)
+    assert m2.model is m.model
+
+
+def test_greedy_matches_direct_engine_wiring(lvlm, prompts):
+    """The facade greedy path must be token-identical to the old
+    get_config -> build -> EngineConfig -> Engine hand-wiring."""
+    outs = lvlm.generate(prompts, GenerationConfig(decoder="greedy",
+                                                   max_new_tokens=8))
+    eng = Engine(lvlm.model, lvlm.params,
+                 EngineConfig(max_batch=4, cache_len=64))
+    reqs = [Request(rid=i, tokens=list(p), max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for o, r in zip(outs, reqs):
+        assert o.tokens == r.generated
+        assert len(o.tokens) == 8
+
+
+def test_all_four_decoders_one_signature(lvlm, prompts):
+    prompt = prompts[0]
+    ref = lvlm.generate(prompt, GenerationConfig(decoder="greedy",
+                                                 max_new_tokens=8))
+    for decoder in ("greedy", "sampling", "speculative", "early_exit"):
+        out = lvlm.generate(prompt, GenerationConfig(
+            decoder=decoder, temperature=0.0, max_new_tokens=8,
+            exit_threshold=1.1))
+        assert len(out.tokens) == 8, decoder
+        assert out.decoder == decoder
+        # at temperature 0 every strategy must reproduce the greedy stream
+        # (speculative: exactness guarantee; early_exit: threshold>1 never
+        # fires; sampling: temp 0 == argmax)
+        assert out.tokens == ref.tokens, decoder
+
+
+def test_speculative_self_draft_accepts_all(lvlm, prompts):
+    out = lvlm.generate(prompts[0], GenerationConfig(
+        decoder="speculative", temperature=0.0, max_new_tokens=9, gamma=3))
+    assert out.stats["acceptance"] == 1.0
+    assert out.stats["target_calls"] <= 4      # ~gamma+1 tokens per call
+
+
+def test_speculative_with_separate_draft(lvlm, prompts):
+    draft = LVLM.from_pretrained(
+        "phi4-mini-3.8b", smoke=True, seed=1, num_layers=1, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, head_dim=32)
+    ref = lvlm.generate(prompts[1], GenerationConfig(max_new_tokens=8))
+    out = lvlm.generate(prompts[1], GenerationConfig(
+        decoder="speculative", temperature=0.0, max_new_tokens=8),
+        draft=draft)
+    assert out.tokens == ref.tokens            # exactness despite bad draft
+
+
+def test_early_exit_fires_and_reports_depth(lvlm, prompts):
+    out = lvlm.generate(prompts[0], GenerationConfig(
+        decoder="early_exit", temperature=0.0, max_new_tokens=6,
+        exit_threshold=0.0, exit_patience=0, exit_min_layers=1))
+    assert len(out.tokens) == 6
+    assert out.stats["exit_rate"] == 1.0
+    assert out.stats["layers_used_mean"] < lvlm.cfg.num_layers
+
+
+def test_generate_stream_matches_generate(lvlm, prompts):
+    gen = GenerationConfig(decoder="greedy", max_new_tokens=8)
+    ref = lvlm.generate(prompts[0], gen)
+    streamed = list(lvlm.generate_stream(prompts[0], gen))
+    assert streamed == ref.tokens
+
+
+def test_compression_presets_resolve():
+    assert resolve_compression("none") == CompressionConfig()
+    cc = resolve_compression("fastv-0.5")
+    assert cc.token_pruner == "fastv" and cc.keep_ratio == 0.5
+    cc = resolve_compression("streaming-kv")
+    assert cc.kv_selector == "streaming" and cc.kv_budget > 0
+    # parametric names beyond the preset table
+    cc = resolve_compression("divprune-0.25")
+    assert cc.token_pruner == "divprune" and cc.keep_ratio == 0.25
+    cc = resolve_compression("streaming-kv-128")
+    assert cc.kv_selector == "streaming" and cc.kv_budget == 128
+    with pytest.raises(ValueError):
+        resolve_compression("quantum-entangle-0.5")
+    assert len(COMPRESSION_PRESETS) >= 4
+
+
+def test_presets_run_end_to_end_on_vlm(vlm):
+    rng = np.random.RandomState(3)
+    prompt = list(rng.randint(1, vlm.cfg.vocab_size, size=10))
+    ve = rng.randn(vlm.cfg.num_visual_tokens,
+                   vlm.cfg.d_model).astype(np.float32) * 0.02
+    for preset in ("none", "fastv-0.5", "divprune-0.5", "streaming-kv"):
+        out = vlm.generate(prompt, GenerationConfig(
+            max_new_tokens=4, compression=preset), visual_embeds=ve)
+        assert len(out.tokens) == 4, preset
+
+
+def test_generate_honors_gen_with_explicit_engine_cfg(lvlm, prompts):
+    """generation knobs come from GenerationConfig even when the caller
+    supplies an EngineConfig for the serving-layer knobs."""
+    ref = lvlm.generate(prompts[0], GenerationConfig(decoder="greedy",
+                                                     max_new_tokens=6))
+    out = lvlm.generate(prompts[0],
+                        GenerationConfig(decoder="greedy", max_new_tokens=6),
+                        engine_cfg=EngineConfig(max_batch=2, cache_len=96,
+                                                temperature=5.0))
+    assert out.tokens == ref.tokens    # greedy wins over ec.temperature
+
+
+def test_decoder_cost_reaches_virtual_clock(lvlm, prompts):
+    """speculative rounds are charged their true (draft + block-verify)
+    cost, not one plain decode step; early exit is charged the executed
+    layer fraction."""
+    gen = GenerationConfig(decoder="speculative", temperature=0.0,
+                           max_new_tokens=8, gamma=3)
+    sp = lvlm.generate(prompts[0], gen)
+    gr = lvlm.generate(prompts[0], GenerationConfig(decoder="greedy",
+                                                    max_new_tokens=8))
+    # self-draft speculative pays the draft's full decode cost on top of
+    # the verify passes -- its virtual time must NOT be ~1/gamma of greedy
+    assert sp.stats["virtual_time_s"] > 0.5 * gr.stats["virtual_time_s"]
+    ee = lvlm.generate(prompts[0], GenerationConfig(
+        decoder="early_exit", temperature=0.0, max_new_tokens=8,
+        exit_threshold=0.0, exit_patience=0, exit_min_layers=1))
+    # exiting after 1 of 2 layers must be cheaper than full-depth greedy
+    assert ee.stats["virtual_time_s"] < gr.stats["virtual_time_s"]
+
+
+def test_serve_runs_scheduler_with_metrics(lvlm, prompts):
+    reqs = [Request(rid=i, tokens=list(p), max_new_tokens=4,
+                    arrival=i * 0.01) for i, p in enumerate(prompts)]
+    rep = lvlm.serve(reqs, EngineConfig(max_batch=2, cache_len=64,
+                                        scheduler="chunked"))
+    assert rep.stats["finished"] == len(prompts)
+    assert rep.stats["virtual_time_s"] > 0
+    assert len(rep.requests) == len(prompts)
+
+
+def test_bad_decoder_name_rejected():
+    with pytest.raises(ValueError):
+        GenerationConfig(decoder="beam")
