@@ -4,6 +4,8 @@ facade.
 Real engine, real smoke model, virtual-clock metrics:
   * scheduler comparison on a bursty mixed-length workload,
   * prefix caching on shared-system-prompt traffic,
+  * per-request decoder mixing: greedy + sampling + speculative +
+    early-exit requests in ONE engine run (batched speculative slots),
   * disaggregated vs colocated pools under KV-transfer cost (analytic sim).
 """
 from __future__ import annotations
@@ -11,7 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.api import EngineConfig, LVLM, Request
+from repro.api import EngineConfig, GenerationConfig, LVLM, Request
 from repro.core.serving import (CostModel, PoolConfig, goodput,
                                 simulate_colocated, simulate_disaggregated)
 
@@ -49,6 +51,33 @@ def prefix_cache(lvlm: LVLM) -> None:
              extra + f"ttft_mean={out['ttft_mean']:.4f}")
 
 
+def mixed_decoders(lvlm: LVLM) -> None:
+    """One engine, four decode strategies concurrently (survey dim 4 at
+    serving scale): per-request ``decoder`` mixing with batched speculative
+    slots, vs the same workload served all-greedy."""
+    strategies = ("speculative", "speculative", "speculative", "greedy",
+                  "sampling", "early_exit", "greedy", "speculative")
+    for label, decs in (("mixed", strategies),
+                        ("all_greedy", ("greedy",) * len(strategies))):
+        reqs = _reqs(lvlm.cfg, len(decs), seed=4, lo=8, hi=24, new=8,
+                     gap=0.0005)
+        for r, d in zip(reqs, decs):
+            r.decoder = d
+        out = lvlm.serve(
+            reqs, EngineConfig(max_batch=4, cache_len=128,
+                               temperature=0.0),
+            gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                 max_new_tokens=8, gamma=3)).stats
+        spec = (f"spec_acc={out.get('speculative/acceptance', 0):.2f};"
+                f"spec_slots={out.get('speculative/max_slots_per_round', 0)};"
+                if label == "mixed" else "")
+        emit(f"serve/mixed_decoders/{label}",
+             out["virtual_time_s"] * 1e6,
+             spec + f"ttft_mean={out['ttft_mean']:.4f};"
+             f"jct_mean={out['jct_mean']:.4f};"
+             f"tput={out['throughput_tok_per_s']:.0f}")
+
+
 def disaggregation() -> None:
     cost = CostModel(prefill_us_per_token=30.0, decode_us_per_token=600.0,
                      decode_us_per_ctx_token=0.01,
@@ -77,6 +106,7 @@ def run() -> None:
     lvlm = LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
     schedulers(lvlm)
     prefix_cache(lvlm)
+    mixed_decoders(lvlm)
     disaggregation()
 
 

@@ -8,6 +8,17 @@ is the internal layer and stays importable for advanced use.
     from repro.api import LVLM, GenerationConfig
     lvlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
     result = lvlm.generate(prompt, GenerationConfig(max_new_tokens=16))
+
+Every strategy is a BATCHED slot strategy: ``Request.decoder`` selects a
+per-request strategy and one engine serves a mixed-strategy workload,
+with all speculative slots sharing each jitted draft/verify round
+(per-slot draft caches in a second slot pool) and ``gamma`` KV lookahead
+reserved per speculative slot for the block verify:
+
+    reqs = [Request(rid=0, tokens=p0, decoder="speculative"),
+            Request(rid=1, tokens=p1, decoder="greedy")]
+    rep = lvlm.serve(reqs, EngineConfig(max_batch=4, cache_len=256))
+    rep.stats["speculative/acceptance"]       # mixed stats are prefixed
 """
 from repro.api.decoders import (
     DECODERS, EarlyExitDecoder, GreedyDecoder, SamplingDecoder,

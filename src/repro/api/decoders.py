@@ -4,17 +4,33 @@ Each strategy implements the engine decoder protocol (duck-typed; see
 ``SamplingEngineDecoder`` in core/serving/engine.py for the contract):
 
     engine_decode(engine, reqs) -> {slot: [emitted tokens]}
-    validate(engine)            -- optional, run at Engine construction
+    validate(engine)            -- optional, run when the strategy is first
+                                   resolved for a request (or at Engine
+                                   construction for the default)
     stats()                     -- strategy-specific counters for reports
+    lookahead_tokens            -- optional int attr: extra KV positions a
+                                   slot of this strategy may write past the
+                                   committed stream (speculative: gamma)
 
-``greedy`` / ``sampling`` reuse the engine's fixed-shape jitted decode step
-and work at any batch size. ``speculative`` and ``early_exit`` are batch-1
-introspection paths: speculative replaces the memory-bound decode loop with
-draft-then-verify rounds against the slot cache (one ``model.extend`` per
-round), early exit runs the host-side unstacked-layer loop so skipped layers
-are truly never executed. Both share their round primitives with the
-standalone drivers in ``repro.core.decoding``, so engine-integrated and
-library-level decoding follow the same math.
+All four strategies are now first-class BATCHED slot strategies: the engine
+groups decode-phase slots by each request's resolved strategy
+(``Request.decoder`` or the engine default) every iteration and hands each
+decoder its whole group, so one Engine serves greedy, sampling,
+speculative, and early-exit requests concurrently.
+
+``greedy`` / ``sampling`` reuse the engine's fixed-shape jitted decode
+step. ``speculative`` keeps per-slot draft KV caches in a SECOND slot pool
+and runs one round per iteration over ALL its slots at once: a fixed-shape
+2-token lead ``extend`` plus per-step batched draft ``decode_step``s
+propose gamma tokens per slot, then ONE ``model.extend`` with per-row
+starts block-verifies every slot's draft against the engine pool
+(``batched_draft_block`` in core/decoding/speculative.py). ``early_exit``
+slices each of its slots to a batch-1 cache for the host-side
+unstacked-layer loop (skipped layers are truly never executed) -- the exit
+decision stays per-request, uncontaminated by other slots. All strategies
+share their round primitives with the standalone drivers in
+``repro.core.decoding``, so engine-integrated and library-level decoding
+follow the same math (and, at temperature 0, the same tokens).
 """
 from __future__ import annotations
 
@@ -22,11 +38,12 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.decoding.early_exit import early_exit_decode_step
 from repro.core.decoding.sampling import sample_token
 from repro.core.decoding.speculative import (
-    SpecStats, accept_block, acceptance_rate, draft_block,
+    SpecStats, accept_block, acceptance_rate, batched_draft_block,
     lantern_neighbourhood_from_params)
 from repro.core.serving.engine import (
     SamplingEngineDecoder, _slot_get, _slot_set)
@@ -51,8 +68,11 @@ class SamplingDecoder(SamplingEngineDecoder):
 class EarlyExitDecoder:
     """AdaInfer-style adaptive-depth decoding inside the engine (dim 4b).
 
-    Batch-1: the logit-lens confidence of garbage (inactive) slots would
-    poison the joint exit decision, so the strategy requires max_batch=1.
+    Mixed-batch capable: each request's slot cache is sliced out to a
+    batch-1 view for the host-side unstacked-layer loop (a real ``break``
+    -- skipped layers never execute) and written back, so the per-request
+    exit decision is never poisoned by other slots' logit-lens confidence
+    and early-exit requests coexist with any other strategy in one engine.
     """
     name = "early_exit"
 
@@ -65,9 +85,6 @@ class EarlyExitDecoder:
         self.exits = 0
 
     def validate(self, eng) -> None:
-        if eng.ec.max_batch != 1:
-            raise ValueError("early_exit is a batch-1 introspection path; "
-                             "use max_batch=1")
         if eng.compacting:
             raise ValueError("early_exit is incompatible with live KV "
                              "compaction (needs the non-windowed cache)")
@@ -87,10 +104,12 @@ class EarlyExitDecoder:
             s = r._slot
             ctx = float(eng.slot_pos[s])
             toks = jnp.asarray([[int(eng.slot_last_tok[s])]], jnp.int32)
-            logits, eng.pool, info = early_exit_decode_step(
-                eng.model, eng.params, eng.pool, toks,
+            one = _slot_get(eng.pool, s)
+            logits, one, info = early_exit_decode_step(
+                eng.model, eng.params, one, toks,
                 int(eng.slot_pos[s]), threshold=self.threshold,
                 patience=self.patience, min_layers=self.min_layers)
+            eng.pool = _slot_set(eng.pool, s, one)
             self.layers_used.append(int(info["layers_used"]))
             self.exits += int(info["exited"])
             # virtual clock sees the FLOPs actually spent: a decode step
@@ -110,15 +129,29 @@ class EarlyExitDecoder:
 
 
 class SpeculativeDecoder:
-    """Draft-then-verify decoding inside the engine (dim 4a, batch-1).
+    """Draft-then-verify decoding inside the engine (dim 4a), BATCHED.
 
-    Per engine iteration, one round: the draft model proposes ``gamma``
-    tokens from its own text-only cache (Gagrani-style language-only
-    drafting -- the draft never sees the visual embeddings), then ONE
-    ``model.extend`` over the request's slot cache scores the whole block
-    and Leviathan/Chen acceptance (optionally LANTERN-relaxed) emits
-    1..gamma+1 tokens. Round primitives are shared with
-    ``speculative_generate``; ``draft=None`` self-drafts with the target.
+    A first-class slot strategy: per engine iteration, ONE round over all
+    speculative slots at once. Per-slot draft KV caches live in a second
+    slot pool mirroring the engine's (text-only positions -- Gagrani-style
+    language-only drafting: the draft never sees the visual embeddings).
+    Each round runs fixed-shape jitted calls over the WHOLE draft pool
+    (a 2-token lead ``extend`` with per-row starts, then one batched
+    ``decode_step`` per draft token -- ``batched_draft_block``), then ONE
+    ``model.extend`` with per-row starts over the engine pool scores every
+    slot's ``[last_tok | draft block]`` in a single compute-dense pass.
+    Leviathan/Chen acceptance (optionally LANTERN-relaxed) runs per slot on
+    the row-sliced logits and emits 1..gamma+1 tokens per request.
+
+    Acceptance math and the proposal distribution are shared with the
+    standalone ``speculative_generate`` driver, so engine-batched and
+    library-level speculative emit bit-identical tokens at temperature 0.
+    ``draft=None`` self-drafts with the target (acceptance upper bound).
+
+    The virtual clock charges the group its true amortized cost: one
+    (1+gamma)-tokens-per-slot block verify (prefill-shaped) plus gamma
+    draft steps whose decode cost is PER CALL, not per slot -- the
+    batching win the survey's serving sections call out.
     """
     name = "speculative"
 
@@ -132,13 +165,18 @@ class SpeculativeDecoder:
         self.lantern_k = lantern_k
         self.lantern_delta = lantern_delta
         self.stats_ = SpecStats()
-        self._slot_state: Dict[int, Dict] = {}   # slot -> {req, d_cache}
+        self.group_sizes: List[int] = []    # slots per jitted round
+        self._slot_req: Dict[int, object] = {}   # slot -> bound Request
+        self._d_pool = None
         self._bound = False
 
+    @property
+    def lookahead_tokens(self) -> int:
+        """KV slack per slot: verify writes up to gamma positions past the
+        committed stream (the engine reserves it at submit)."""
+        return self.gamma
+
     def validate(self, eng) -> None:
-        if eng.ec.max_batch != 1:
-            raise ValueError("speculative is a batch-1 path inside the "
-                             "engine; use max_batch=1")
         if eng.compacting:
             raise ValueError("speculative verify (extend) is incompatible "
                              "with live KV compaction")
@@ -152,19 +190,31 @@ class SpeculativeDecoder:
                 "proposed": st.proposed, "accepted": st.accepted,
                 "bonus": st.bonus, "target_calls": st.target_calls,
                 "draft_calls": st.draft_calls,
-                "mean_accepted_per_call": st.mean_accepted_per_call()}
+                "mean_accepted_per_call": st.mean_accepted_per_call(),
+                "spec_rounds": len(self.group_sizes),
+                "max_slots_per_round": max(self.group_sizes, default=0)}
 
     def _bind(self, eng) -> None:
         if self._bound:
+            if eng is not self._engine:
+                # the draft pool is shaped/paramed for ONE engine; silent
+                # reuse would index a wrong-sized pool or draft with stale
+                # weights -- make the one-engine assumption explicit
+                raise ValueError("SpeculativeDecoder instances are "
+                                 "engine-specific once bound; build one "
+                                 "per Engine")
             return
+        self._engine = eng
         draft = self.draft_model if self.draft_model is not None \
             else eng.model
         self._dp = self.d_params if self.draft_model is not None \
             else eng.params
-        # draft positions run text-only; headroom for the deepest round
-        d_cache_len = eng.ec.cache_len + self.gamma + 8
+        # draft positions run text-only; headroom for the deepest round,
+        # last position reserved as the inactive-row scratch
+        self._d_cache_len = eng.ec.cache_len + self.gamma + 8
+        self._d_pool = draft.init_cache(eng.ec.max_batch, self._d_cache_len)
         self._d_prefill = jax.jit(
-            lambda p, b: draft.prefill(p, b, cache_len=d_cache_len))
+            lambda p, b: draft.prefill(p, b, cache_len=self._d_cache_len))
         self._d_extend = jax.jit(draft.extend)
         self._d_decode = jax.jit(draft.decode_step)
         self._nbhd = None
@@ -183,60 +233,94 @@ class SpeculativeDecoder:
     def engine_decode(self, eng, reqs) -> Dict[int, List[int]]:
         self._bind(eng)
         ec = eng.ec
-        emitted_map: Dict[int, List[int]] = {}
-        cost = 0.0
+        B = ec.max_batch
+        # (re)prefill draft rows for slots newly bound to a request
+        # (slot reuse overwrites the row; stale tail entries are hidden by
+        # causal masking until overwritten, same as the engine pool)
         for r in reqs:
             s = r._slot
-            st = self._slot_state.get(s)
-            if st is None or st["req"] is not r:     # slot reused: re-prefill
+            if self._slot_req.get(s) is not r:
                 prompt = jnp.asarray(r.tokens, jnp.int32)[None]
-                _, d_cache = self._d_prefill(self._dp, {"tokens": prompt})
+                _, one = self._d_prefill(self._dp, {"tokens": prompt})
+                self._d_pool = _slot_set(self._d_pool, s, one)
                 self.stats_.draft_calls += 1
-                st = {"req": r, "d_cache": d_cache,
-                      "d_valid": len(r.tokens)}
-                self._slot_state[s] = st
-            nv = int(eng.slot_nv[s])
-            t_len = int(eng.slot_pos[s]) - nv        # text tokens scored
-            tok = int(eng.slot_last_tok[s])
-            # verify writes positions slot_pos..slot_pos+g; keep clear of
-            # the reserved scratch position cache_len-1
-            g = max(0, min(self.gamma,
-                           ec.cache_len - 2 - int(eng.slot_pos[s])))
-            committed = list(r.tokens) + list(r.generated)  # text stream
-            lead = committed[st["d_valid"]:t_len + 1]
-            draft_toks, draft_ps, st["d_cache"], eng.key = draft_block(
-                self._d_extend, self._d_decode, self._dp, st["d_cache"],
-                lead, st["d_valid"], gamma=g, temperature=ec.temperature,
-                key=eng.key, stats=self.stats_)
-            block = jnp.asarray([[tok] + draft_toks], jnp.int32)
-            one = _slot_get(eng.pool, s)
-            t_logits, one = eng._jit_extend(eng.params, one, block,
-                                            jnp.int32(eng.slot_pos[s]))
-            eng.pool = _slot_set(eng.pool, s, one)
-            self.stats_.target_calls += 1
-            self.stats_.proposed += g
-            emitted, n_acc, bonus, eng.key = accept_block(
-                eng.key, t_logits, draft_toks, draft_ps,
+                self._slot_req[s] = r
+
+        # group gamma: submit-time lookahead reservation keeps every slot's
+        # verify writes clear of the scratch position, so this min() is a
+        # belt-and-braces clamp that normally equals self.gamma
+        g = self.gamma
+        for r in reqs:
+            g = min(g, ec.cache_len - 2 - int(eng.slot_pos[r._slot]))
+        g = max(0, g)
+
+        # --- batched draft: 2-token lead + (g-1) decode steps ------------
+        d_scr = self._d_cache_len - 1
+        lead2 = np.zeros((B, 2), np.int32)
+        starts = np.full(B, d_scr - 1, np.int64)
+        pos0 = np.full(B, d_scr, np.int64)
+        for r in reqs:
+            s = r._slot
+            t_len = int(eng.slot_pos[s]) - int(eng.slot_nv[s])
+            committed = list(r.tokens) + list(r.generated)   # text stream
+            lead2[s] = committed[t_len - 1:t_len + 1]
+            starts[s] = t_len - 1
+            pos0[s] = t_len
+        eng.key, k_draft = jax.random.split(eng.key)
+        draft_toks, draft_ps, self._d_pool, _ = batched_draft_block(
+            self._d_extend, self._d_decode, self._dp, self._d_pool,
+            lead2, starts, pos0, gamma=g, temperature=ec.temperature,
+            key=k_draft, scratch_pos=d_scr, stats=self.stats_,
+            n_slots=len(reqs))
+
+        # --- batched verify: ONE extend, per-row starts ------------------
+        blk = np.zeros((B, 1 + g), np.int32)
+        vstarts = np.full(B, ec.cache_len - 1, np.int64)
+        for r in reqs:
+            s = r._slot
+            blk[s, 0] = eng.slot_last_tok[s]
+            blk[s, 1:] = draft_toks[s]
+            vstarts[s] = eng.slot_pos[s]
+        t_logits, eng.pool = eng._jit_extend(
+            eng.params, eng.pool, jnp.asarray(blk), jnp.asarray(vstarts))
+        self.stats_.target_calls += len(reqs)
+        self.stats_.proposed += g * len(reqs)
+        self.group_sizes.append(len(reqs))
+
+        # --- per-slot acceptance on row-sliced logits --------------------
+        eng.key, k_acc = jax.random.split(eng.key)
+        keys = jax.random.split(k_acc, max(len(reqs), 1))
+        emitted_map: Dict[int, List[int]] = {}
+        for r, k_r in zip(reqs, keys):
+            s = r._slot
+            emitted, n_acc, bonus, _ = accept_block(
+                k_r, t_logits[s:s + 1],
+                [int(t) for t in draft_toks[s, :g]],
+                [draft_ps[j][s] for j in range(g)],
                 temperature=ec.temperature,
                 limit=r.max_new_tokens - len(r.generated),
                 nbhd=self._nbhd, lantern_delta=self.lantern_delta)
             self.stats_.accepted += n_acc
             self.stats_.bonus += int(bonus)
-            eng.slot_pos[s] += 1 + n_acc             # tok + accepted drafts
-            # whole-block accept leaves the last accepted draft unwritten in
-            # the draft cache; next round's lead replays it
-            st["d_valid"] = (t_len + 1 + n_acc
-                             - (1 if (g > 0 and n_acc == g) else 0))
+            eng.slot_pos[s] += 1 + n_acc         # tok + accepted drafts
             eng.slot_last_tok[s] = emitted[-1]
             emitted_map[s] = emitted
-            # virtual clock: the verify pass is a compute-dense (1+g)-token
-            # block scoring (prefill-shaped), the draft pays g decode steps
-            # scaled by its active-param ratio
-            ctx = float(eng.slot_pos[s])
-            cost += (ec.cost.prefill_time(1 + g)
-                     + self._draft_cost_ratio * g
-                     * ec.cost.decode_step_time(1, ctx))
-        eng._iter_decode_cost = cost
+            # NOTE: a whole-block accept leaves the last accepted draft
+            # unwritten in the draft cache; the next round's fixed 2-token
+            # lead rewrites [c_{t-1}, c_t] and thereby replays it.
+
+        # virtual clock: one (1+g)-token-per-slot compute-dense block
+        # verify, plus the draft's lead extend and g-1 decode steps --
+        # decode steps are charged PER CALL (batched over the group), which
+        # is exactly the amortization batched speculative buys
+        n = len(reqs)
+        ctx = float(np.mean([eng.slot_pos[r._slot] for r in reqs])) \
+            if reqs else 0.0
+        eng._iter_decode_cost = (
+            ec.cost.prefill_time((1 + g) * n)
+            + self._draft_cost_ratio
+            * (ec.cost.prefill_time(2 * n)
+               + max(0, g - 1) * ec.cost.decode_step_time(n, ctx)))
         return emitted_map
 
 

@@ -82,7 +82,16 @@ def resolve_compression(
 
 @dataclasses.dataclass
 class GenerationConfig:
-    """Everything ``LVLM.generate`` needs beyond the prompts themselves."""
+    """Everything ``LVLM.generate`` needs beyond the prompts themselves.
+
+    ``decoder`` sets the DEFAULT strategy; individual requests passed to
+    ``LVLM.serve`` may override it per-request via ``Request.decoder``
+    (the engine groups decode slots by strategy each iteration, so one run
+    mixes all four). Every strategy is batched -- speculative runs all its
+    slots per jitted draft/verify round and reserves ``gamma`` extra KV
+    positions per slot (draft-slot lookahead) on top of
+    ``prompt + max_new_tokens``.
+    """
     max_new_tokens: int = 32
     decoder: str = "greedy"          # greedy | sampling | speculative | early_exit
     # sampling warp (ignored by the greedy decoder)
@@ -111,6 +120,12 @@ class GenerationConfig:
 
     @property
     def effective_temperature(self) -> float:
+        """Temperature the DEFAULT strategy samples at (greedy pins 0).
+
+        The engine now receives the raw ``temperature`` -- greedy groups
+        force 0 themselves so per-request overrides keep sampling -- but
+        this remains the right number to report/log for a uniform run.
+        """
         return 0.0 if self.decoder == "greedy" else self.temperature
 
     def resolved_compression(self) -> CompressionConfig:

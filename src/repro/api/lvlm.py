@@ -26,7 +26,8 @@ import jax
 import numpy as np
 
 from repro.api.decoders import make_decoder
-from repro.api.generation import GenerationConfig, resolve_compression
+from repro.api.generation import (DECODER_NAMES, GenerationConfig,
+                                  resolve_compression)
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core.serving import Engine, EngineConfig, Request
@@ -99,31 +100,45 @@ class LVLM:
         return LVLM(self.model, params)
 
     # ----------------------------------------------------------- engine --
+    def _strategy_decoders(self, gen: GenerationConfig,
+                           draft: Optional["LVLM"]) -> Dict:
+        """Named decoder instances parameterized by ``gen`` -- registered
+        with the engine so PER-REQUEST strategies (``Request.decoder``) use
+        the caller's gamma/LANTERN/exit knobs (and draft model) instead of
+        bare defaults. Validation is lazy: an entry only errors if a
+        request actually selects it."""
+        return {
+            "speculative": make_decoder(
+                "speculative", gen,
+                draft=None if draft is None else draft.model,
+                d_params=None if draft is None else draft.params),
+            "early_exit": make_decoder("early_exit", gen),
+        }
+
     def _build_engine(self, gen: GenerationConfig, *, max_batch: int,
                       cache_len: int, draft: Optional["LVLM"] = None,
                       engine_cfg: Optional[EngineConfig] = None) -> Engine:
-        batch1 = gen.decoder in ("speculative", "early_exit")
         if engine_cfg is None:
-            engine_cfg = EngineConfig(
-                max_batch=1 if batch1 else max_batch,
-                cache_len=cache_len, scheduler="continuous")
+            engine_cfg = EngineConfig(max_batch=max_batch,
+                                      cache_len=cache_len,
+                                      scheduler="continuous")
         # generation knobs always come from gen; engine_cfg keeps only the
-        # serving-layer knobs (batch, cache, scheduler, prefix cache, cost)
+        # serving-layer knobs (batch, cache, scheduler, prefix cache, cost).
+        # Every strategy (speculative/early_exit included) is batched, so
+        # max_batch is never forced down to 1 any more. The RAW temperature
+        # goes on the engine: greedy decoding is enforced per group by the
+        # greedy instances themselves, so a greedy DEFAULT must not zero
+        # the temperature of per-request sampling/speculative overrides.
         engine_cfg = dataclasses.replace(
             engine_cfg,
-            max_batch=1 if batch1 else engine_cfg.max_batch,
-            temperature=gen.effective_temperature,
+            temperature=gen.temperature,
             top_k=gen.top_k, top_p=gen.top_p,
             eos_id=gen.eos_id, seed=gen.seed,
             decoder=gen.decoder,
             compression=gen.resolved_compression())
-        decoder = None
-        if gen.decoder in ("speculative", "early_exit"):
-            decoder = make_decoder(
-                gen.decoder, gen,
-                draft=None if draft is None else draft.model,
-                d_params=None if draft is None else draft.params)
-        return Engine(self.model, self.params, engine_cfg, decoder=decoder)
+        decoders = self._strategy_decoders(gen, draft)
+        return Engine(self.model, self.params, engine_cfg,
+                      decoder=decoders.get(gen.decoder), decoders=decoders)
 
     def _requests(self, prompts, gen, visual_embeds) -> List[Request]:
         n = len(prompts)
@@ -162,6 +177,9 @@ class LVLM:
         self-draft).
         """
         gen = gen if gen is not None else GenerationConfig()
+        # every strategy is a batched slot strategy: multiple prompts run
+        # concurrently even for speculative (all speculative slots share
+        # each jitted draft/verify round) and early_exit (per-slot loop)
         single = _is_single_prompt(prompts)
         if single:
             prompts = [prompts]
@@ -173,7 +191,7 @@ class LVLM:
         for r in reqs:
             eng.submit(r)
         run_stats = eng.run()
-        stats = dict(run_stats, **eng.decoder.stats())
+        stats = dict(run_stats, **eng.decoder_stats())
         results = [GenerationResult(tokens=list(r.generated),
                                     prompt_len=len(r.tokens),
                                     decoder=gen.decoder, stats=stats,
@@ -216,26 +234,34 @@ class LVLM:
         """Full serving run: scheduler + batching + virtual-clock metrics.
 
         ``engine_cfg`` keeps its internal-layer knobs (scheduler, batch,
-        prefix cache, ...); ``gen`` optionally selects the decoder strategy
-        and compression preset on top.
+        prefix cache, ...); ``gen`` optionally selects the DEFAULT decoder
+        strategy and compression preset on top. Any request may override
+        the strategy per-request via ``Request.decoder`` -- one engine run
+        serves greedy, sampling, speculative, and early-exit requests
+        concurrently, with speculative slots batched per draft/verify call
+        (stats from a mixed run are prefixed per strategy, e.g.
+        ``"speculative/acceptance"``). ``draft`` supplies the speculative
+        draft model for both the default and per-request speculative
+        requests (None -> self-draft).
         """
         ec = engine_cfg if engine_cfg is not None else EngineConfig()
-        decoder = None
+        g = gen if gen is not None else GenerationConfig(
+            decoder=ec.decoder if ec.decoder in DECODER_NAMES else "sampling",
+            temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
+            eos_id=ec.eos_id, compression=ec.compression)
         if gen is not None:
+            # raw temperature: the greedy strategy forces 0 per group, so
+            # per-request sampling overrides keep the caller's temperature
             ec = dataclasses.replace(
                 ec, decoder=gen.decoder,
-                temperature=gen.effective_temperature,
+                temperature=gen.temperature,
                 top_k=gen.top_k, top_p=gen.top_p, eos_id=gen.eos_id,
                 compression=gen.resolved_compression())
-            if gen.decoder in ("speculative", "early_exit"):
-                ec = dataclasses.replace(ec, max_batch=1)
-                decoder = make_decoder(
-                    gen.decoder, gen,
-                    draft=None if draft is None else draft.model,
-                    d_params=None if draft is None else draft.params)
-        eng = Engine(self.model, self.params, ec, decoder=decoder)
+        decoders = self._strategy_decoders(g, draft)
+        eng = Engine(self.model, self.params, ec,
+                     decoder=decoders.get(ec.decoder), decoders=decoders)
         for r in requests:
             eng.submit(r)
-        stats = dict(eng.run(), **eng.decoder.stats())
+        stats = dict(eng.run(), **eng.decoder_stats())
         return ServeResult(stats=stats, requests=list(eng.finished),
                            engine=eng)

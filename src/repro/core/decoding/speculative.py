@@ -119,6 +119,56 @@ def draft_block(d_extend, d_decode, d_params, d_cache, lead_toks, start, *,
     return draft_toks, draft_ps, d_cache, key
 
 
+def batched_draft_block(d_extend, d_decode, d_params, d_pool, lead2, starts,
+                        pos0, *, gamma: int, temperature: float, key,
+                        scratch_pos: int, stats: Optional[SpecStats] = None,
+                        n_slots: int = 1):
+    """Draft ``gamma`` tokens for MANY slot rows in fixed-shape jitted calls
+    (the engine's batched counterpart of ``draft_block``).
+
+    ``lead2 [B,2]`` holds, per row, the last two committed text tokens
+    ``[c_{t-1}, c_t]`` and ``starts [B] = t-1``: rewriting position ``t-1``
+    with the token/position pair it already holds is a KV no-op, so ONE
+    fixed-shape 2-token ``extend`` uniformly covers both the
+    post-full-accept draft-cache hole (where ``t-1`` was never written) and
+    the ordinary case -- no per-row ragged lead. ``pos0 [B] = t`` is each
+    row's current last-token position; draft token ``j`` is then scored at
+    ``t+1+j`` by one batched ``decode_step`` per step. Inactive rows are
+    routed to the draft pool's scratch tail (``scratch_pos``); their cache
+    rows are per-row garbage by construction.
+
+    Returns ``(draft_toks [B, gamma] np.int32, draft_ps: gamma x [B, V],
+    d_pool, key)``. Row-sliced outputs feed the same ``accept_block`` as
+    the batch-1 driver, so batched and standalone speculative follow the
+    same proposal distribution.
+    """
+    B = lead2.shape[0]
+    draft_toks = np.zeros((B, gamma), np.int32)
+    draft_ps = []
+    if gamma <= 0:
+        return draft_toks, draft_ps, d_pool, key
+    lg, d_pool = d_extend(d_params, d_pool, jnp.asarray(lead2, jnp.int32),
+                          jnp.asarray(starts, jnp.int32))
+    lg = lg[:, -1]
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    cur = None
+    for g in range(gamma):
+        if g > 0:
+            pos = jnp.minimum(pos0 + g, scratch_pos)
+            lg, d_pool = d_decode(d_params, d_pool, cur, pos)
+        if stats is not None:
+            stats.draft_calls += n_slots
+        pd = sample_probs(lg, temperature=temperature)
+        key, kk = jax.random.split(key)
+        nxt = (jnp.argmax(pd, -1) if temperature <= 0
+               else jax.random.categorical(kk, jnp.log(pd + 1e-30))
+               ).astype(jnp.int32)
+        draft_toks[:, g] = np.asarray(nxt)
+        draft_ps.append(pd)
+        cur = nxt[:, None]
+    return draft_toks, draft_ps, d_pool, key
+
+
 def accept_block(key, t_logits, draft_toks, draft_ps, *, temperature: float,
                  limit: int, nbhd=None, lantern_delta: float = 0.2):
     """Leviathan/Chen acceptance (+ optional LANTERN relaxation) over ONE

@@ -18,10 +18,15 @@ scheduler.py, with the taxonomy dimensions as config switches:
          (chunked prefill runs real ``model.extend`` chunk continuation).
   dim 4  decoding                  -- pluggable ``Decoder`` strategies: the
          per-iteration token emission is a hook (``decoder.engine_decode``)
-         so greedy/sampling (any batch) and speculative / early-exit
-         (batch-1 introspection paths, adapters in ``repro.api.decoders``)
-         all run behind one interface; the standalone drivers in
-         core/decoding remain the library layer.
+         so greedy/sampling/speculative/early-exit all run behind one
+         interface (adapters in ``repro.api.decoders``; the standalone
+         drivers in core/decoding remain the library layer). Every request
+         may carry its OWN strategy (``Request.decoder``): the engine keeps
+         a decoder registry, groups the decode-phase slots by strategy each
+         iteration, and charges each group its true virtual-clock cost --
+         speculative runs all its slots per jitted draft/verify call
+         (draft caches live in a second slot pool), early-exit slices each
+         slot to a batch-1 cache for its host-side layer loop.
 
 NOTE: ``repro.api`` (``LVLM`` / ``GenerationConfig``) is the public surface;
 construct ``Engine`` directly only for internal-layer control.
@@ -33,6 +38,7 @@ container has no TPU); FLOPs/bytes fidelity lives in the roofline pass.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
@@ -62,12 +68,16 @@ class EngineConfig:
     eos_id: int = -1                     # -1 = never stop on eos
     seed: int = 0
     decoder: str = "sampling"            # sampling|greedy|speculative|early_exit
-    #   (speculative/early_exit resolve via repro.api.decoders; an explicit
-    #    Decoder instance passed to Engine(..., decoder=) takes precedence)
+    #   DEFAULT strategy; any request may override it per-request via
+    #   ``Request.decoder`` (speculative/early_exit resolve via
+    #   repro.api.decoders; an explicit Decoder instance passed to
+    #   Engine(..., decoder=) takes precedence for the default, and
+    #   Engine(..., decoders={name: inst}) registers named strategies)
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     prefix_cache: bool = False
     prefix_block: int = 16               # reuse granularity (tokens)
+    prefix_cap: int = 64                 # max cached prefixes (LRU-evicted)
     cost: CostModel = dataclasses.field(default_factory=CostModel)
 
 
@@ -89,6 +99,10 @@ class SamplingEngineDecoder:
 
     def __init__(self, greedy: bool = False):
         self.greedy = greedy
+        # instance name follows the mode so the engine's decoder registry
+        # never routes "sampling" requests to a greedy instance (or splits
+        # one strategy into two groups); subclasses' class attrs agree
+        self.name = "greedy" if greedy else "sampling"
 
     def stats(self) -> Dict:
         return {}
@@ -139,7 +153,8 @@ def _slot_set(pool, slot, one):
 
 
 class Engine:
-    def __init__(self, model, params, ec: EngineConfig, *, decoder=None):
+    def __init__(self, model, params, ec: EngineConfig, *, decoder=None,
+                 decoders: Optional[Dict] = None):
         cfg = model.cfg
         self.ec = ec
         self.params = params
@@ -187,8 +202,9 @@ class Engine:
         self.clock = 0.0
         self.key = jax.random.PRNGKey(ec.seed)
         self.iters = 0
-        # prefix cache: host map, longest block-aligned prefix match
-        self._prefix: Dict[Tuple[int, ...], Tuple] = {}
+        # prefix cache: host map, longest block-aligned prefix match,
+        # true-LRU eviction (lookup hits move-to-end; see _prefix_lookup)
+        self._prefix: "OrderedDict[Tuple[int, ...], Tuple]" = OrderedDict()
         self.prefix_hit_tokens = 0
         self.prefix_total_tokens = 0
 
@@ -199,31 +215,93 @@ class Engine:
         self._jit_decode = jax.jit(
             partial(self.model.decode_step, windowed=self.windowed))
 
+        # decoder registry: the configured default plus named per-request
+        # strategies; unknown names resolve lazily via repro.api.decoders
+        # (validated on first use, so registering e.g. early_exit alongside
+        # a compacting engine only errors if a request actually asks for it)
         self.decoder = decoder if decoder is not None \
             else _make_default_decoder(ec.decoder)
-        validate = getattr(self.decoder, "validate", None)
+        self._decoders: Dict[str, object] = {}
+        if decoders:
+            self._decoders.update(decoders)
+        self._default_name = getattr(self.decoder, "name", ec.decoder)
+        self._decoders[self._default_name] = self.decoder
+        self._validated = set()
+        # names marked at submit: only strategies that actually serve a
+        # request count toward decoder_stats()'s flat-vs-prefixed choice
+        self._used_decoders: set = set()
+        self._validate_decoder(self._default_name, self.decoder)
+
+    # ----------------------------------------------------------- decoders --
+    def _validate_decoder(self, name: str, dec) -> None:
+        if name in self._validated:
+            return
+        validate = getattr(dec, "validate", None)
         if validate is not None:
             validate(self)
+        self._validated.add(name)
+
+    def _resolve_decoder(self, name: Optional[str]) -> Tuple[str, object]:
+        """Per-request strategy resolution: None -> the engine default."""
+        if name is None:
+            return self._default_name, self.decoder
+        dec = self._decoders.get(name)
+        if dec is None:
+            dec = _make_default_decoder(name)
+            self._decoders[name] = dec
+        self._validate_decoder(name, dec)
+        return name, dec
+
+    def decoder_stats(self) -> Dict:
+        """Counters of every strategy that served a request. A single
+        strategy reports flat keys (back-compat); a mixed run prefixes
+        them with the strategy name."""
+        names = [n for n in self._decoders if n in self._used_decoders]
+        if not names:                     # nothing submitted yet
+            names = [self._default_name]
+        if len(names) == 1:
+            return dict(self._decoders[names[0]].stats())
+        out: Dict = {}
+        for n in names:
+            for k, v in self._decoders[n].stats().items():
+                out[f"{n}/{k}"] = v
+        return out
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
-        if req.prompt_len + req.max_new_tokens > self.ec.cache_len - 1:
+        name, dec = self._resolve_decoder(req.decoder)
+        self._used_decoders.add(name)
+        # speculative slots verify up to gamma positions past the committed
+        # stream: reserve that slack so block writes stay clear of the
+        # scratch position (and schedulers account it as KV footprint)
+        req.lookahead = max(req.lookahead,
+                            int(getattr(dec, "lookahead_tokens", 0)))
+        need = req.prompt_len + req.max_new_tokens + req.lookahead
+        if need > self.ec.cache_len - 1:
             raise ValueError(
-                f"request {req.rid} needs {req.prompt_len + req.max_new_tokens}"
-                f" tokens; cache_len-1 = {self.ec.cache_len - 1} available"
+                f"request {req.rid} needs {need} tokens"
+                f" (incl. {req.lookahead} decode lookahead);"
+                f" cache_len-1 = {self.ec.cache_len - 1} available"
                 " (last position is the inactive-slot scratch)")
         req.arrival = max(req.arrival, self.clock)
         self.waiting.append(req)
 
     # ------------------------------------------------------------- prefix --
     def _prefix_lookup(self, tokens: List[int]) -> Tuple[int, Optional[Tuple]]:
-        best_k, best = 0, None
+        """Longest block-aligned cached prefix of ``tokens``.
+
+        Inserted keys are always multiples of ``prefix_block``, so probing
+        descending block-aligned lengths is exact and O(len/block) probes
+        per prefill instead of the old O(#entries x prefix_len) scan. A hit
+        is an LRU touch (move-to-end)."""
+        bs = self.ec.prefix_block
         t = tuple(tokens)
-        for key, val in self._prefix.items():
-            k = len(key)
-            if k > best_k and t[:k] == key:
-                best_k, best = k, val
-        return best_k, best
+        for k in range((len(t) // bs) * bs, 0, -bs):
+            hit = self._prefix.get(t[:k])
+            if hit is not None:
+                self._prefix.move_to_end(t[:k])
+                return k, hit
+        return 0, None
 
     def _prefix_insert(self, tokens: List[int], slot: int, length: int):
         bs = self.ec.prefix_block
@@ -232,11 +310,12 @@ class Engine:
             return
         key = tuple(tokens[:k])
         if key in self._prefix:
+            self._prefix.move_to_end(key)            # re-insert = LRU touch
             return
         snap = jax.tree.map(lambda a: a[:, :, :k], _slot_get(self.pool, slot))
         self._prefix[key] = (snap, k)
-        if len(self._prefix) > 64:                       # LRU-ish cap
-            self._prefix.pop(next(iter(self._prefix)))
+        while len(self._prefix) > self.ec.prefix_cap:
+            self._prefix.popitem(last=False)         # evict least recent
 
     def _install_snap(self, slot: int, snap) -> None:
         def put(a, s):
@@ -317,8 +396,8 @@ class Engine:
             if self.compacting and ec.compression.kv_budget:
                 self._compact_slot(slot)
             self.key, k1 = jax.random.split(self.key)
-            temp = 0.0 if getattr(self.decoder, "greedy", False) \
-                else ec.temperature
+            _, dec = self._resolve_decoder(req.decoder)
+            temp = 0.0 if getattr(dec, "greedy", False) else ec.temperature
             tok = int(sample_token(k1, logits[:, -1], temperature=temp,
                                    top_k=ec.top_k, top_p=ec.top_p)[0])
             req.generated.append(tok)
@@ -371,15 +450,41 @@ class Engine:
 
     # ------------------------------------------------------------- decode --
     def _decode_iteration(self, reqs: List[Request]) -> None:
-        """One decode iteration through the pluggable decoder hook.
+        """One decode iteration through the pluggable decoder hooks.
 
-        The decoder runs the forward pass(es) and slot bookkeeping and may
-        emit MULTIPLE tokens per request per iteration (speculative); the
-        engine applies request bookkeeping and stop conditions.
+        Decode-phase slots are GROUPED by each request's resolved strategy
+        (``Request.decoder`` or the engine default) and each group's
+        decoder runs once over its whole group -- batched speculative runs
+        every speculative slot per jitted draft/verify call. Decoders run
+        the forward pass(es) and slot bookkeeping and may emit MULTIPLE
+        tokens per request per iteration (speculative); the engine applies
+        request bookkeeping and stop conditions (eos emitted mid-block
+        truncates the block: nothing is appended past DONE).
+
+        Each group is charged its TRUE virtual-clock cost: the group's
+        decoder may report one via ``_iter_decode_cost`` (speculative's
+        block-verify + amortized draft steps, early-exit's executed-layer
+        fraction); otherwise the group pays one plain batched decode step.
+        Costs sum into the iteration's total.
         """
-        emitted = self.decoder.engine_decode(self, reqs)
+        groups: Dict[str, List[Request]] = {}
         for r in reqs:
-            for tok in emitted.get(r._slot, ()):
+            name, _ = self._resolve_decoder(r.decoder)
+            groups.setdefault(name, []).append(r)
+        total_cost = 0.0
+        emitted_all: Dict[int, List[int]] = {}
+        for name, group in groups.items():
+            dec = self._decoders[name]
+            self._iter_decode_cost = None
+            emitted_all.update(dec.engine_decode(self, group))
+            if self._iter_decode_cost is None:
+                ctx = float(np.mean([self.slot_pos[r._slot] for r in group]))
+                total_cost += self.ec.cost.decode_step_time(len(group), ctx)
+            else:
+                total_cost += self._iter_decode_cost
+        self._iter_decode_cost = total_cost
+        for r in reqs:
+            for tok in emitted_all.get(r._slot, ()):
                 r.generated.append(tok)
                 r.served_tokens += 1
                 if r.is_finished() or tok == self.ec.eos_id:
@@ -403,18 +508,13 @@ class Engine:
         for req, n in plan.prefill:
             self._do_prefill_chunk(req, n)
         decode_reqs = [r for r in plan.decode if r.state == State.DECODE]
-        self._iter_decode_cost = None     # decoders may report their true cost
+        self._iter_decode_cost = 0.0      # summed per strategy group
         if decode_reqs:
             self._decode_iteration(decode_reqs)
         # virtual clock
-        ctx = float(np.mean([self.slot_pos[r._slot] for r in decode_reqs])) \
-            if decode_reqs else 0.0
         dt = self.ec.cost.prefill_time(plan.prefill_tokens
                                        + self._iter_visual_tokens)
-        if decode_reqs:
-            dt += (self._iter_decode_cost if self._iter_decode_cost
-                   is not None
-                   else self.ec.cost.decode_step_time(len(decode_reqs), ctx))
+        dt += self._iter_decode_cost
         self.clock += dt
         self.iters += 1
         # stamp times & retire

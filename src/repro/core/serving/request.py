@@ -30,6 +30,17 @@ class Request:
     visual_embeds: Optional[np.ndarray] = None   # [Nv, d] stub patches
     arrival: float = 0.0
     slo: SLO = dataclasses.field(default_factory=SLO)
+    # per-request decode strategy (survey dim 4): None -> the engine's
+    # configured default; otherwise a registered decoder name
+    # ("greedy" | "sampling" | "speculative" | "early_exit" | custom).
+    # The engine groups decode-phase slots by strategy each iteration, so
+    # one Engine serves a mixed-strategy workload.
+    decoder: Optional[str] = None
+    # extra KV positions reserved beyond prompt+max_new (set by the engine
+    # at submit: speculative verify writes up to ``gamma`` draft positions
+    # ahead of the committed stream, so its slots need gamma slack).
+    # Schedulers account it when admitting against KV capacity.
+    lookahead: int = 0
 
     # runtime state ---------------------------------------------------------
     state: State = State.WAITING

@@ -41,7 +41,9 @@ class StaticBatcher:
 
     def plan(self, waiting: List[Request], running: List[Request]
              ) -> IterationPlan:
-        self.current = [r for r in self.current if not r.is_finished()]
+        # drop finished AND eos-stopped (DONE before max_new_tokens) requests
+        self.current = [r for r in self.current
+                        if not r.is_finished() and r.state != State.DONE]
         if not self.current:
             admit = waiting[: self.batch_size]
             for r in admit:
@@ -67,8 +69,12 @@ class ContinuousBatcher:
         self.block_size = block_size
 
     def _kv_used(self, running: List[Request]) -> int:
+        # ``lookahead`` reserves the speculative draft/verify slack: those
+        # slots write up to gamma positions past the committed stream, so
+        # capacity accounting must include it or admission overcommits.
         bs = self.block_size
-        return sum(((r.total_len + r.max_new_tokens + bs - 1) // bs) * bs
+        return sum(((r.total_len + r.max_new_tokens + r.lookahead + bs - 1)
+                    // bs) * bs
                    for r in running)
 
     def plan(self, waiting: List[Request], running: List[Request]
@@ -79,7 +85,8 @@ class ContinuousBatcher:
         for r in list(waiting):
             if len(running) + len(prefill) >= self.max_batch:
                 break
-            need = ((r.prompt_len + r.max_new_tokens + self.block_size - 1)
+            need = ((r.prompt_len + r.max_new_tokens + r.lookahead
+                     + self.block_size - 1)
                     // self.block_size) * self.block_size
             if used + need > self.kv_capacity:
                 break

@@ -4,7 +4,8 @@ through the unified ``repro.api`` facade.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b --smoke \
         --requests 16 --scheduler chunked --compression divprune-0.5
 
-    # decoder strategies (speculative/early_exit run batch-1):
+    # decoder strategies (all batched; speculative slots share each
+    # jitted draft/verify round):
     PYTHONPATH=src python -m repro.launch.serve --decoder speculative
 """
 from __future__ import annotations

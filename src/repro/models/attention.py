@@ -283,11 +283,33 @@ def prefill_into_cache(p, x, cos, sin, cfg, cache, *, window=0,
     return out_proj(p, o), cache
 
 
+def _extend_positions(start, s_new: int):
+    """Positions written by an extend: start scalar -> [1,S_new] (shared by
+    the batch); start [B] -> [B,S_new] per-request block offsets (batched
+    speculative verify)."""
+    start = jnp.asarray(start, jnp.int32)
+    pos = start[..., None] + jnp.arange(s_new, dtype=jnp.int32)
+    return pos[None] if pos.ndim == 1 else pos
+
+
 def _cache_write_extend(cache, new_k, new_v, start, windowed):
-    """Write S_new entries at scalar offset ``start`` (chunked prefill /
-    prefix-cache continuation)."""
+    """Write S_new entries at offset ``start`` -- scalar (chunked prefill /
+    prefix-cache continuation) or [B] per-request starts (batched
+    speculative block verify). Per-request rows routed past the end are
+    clipped onto the last position, the engine's reserved scratch slot."""
     length = cache["k"].shape[1]
     s_new = new_k.shape[1]
+    if jnp.asarray(start).ndim:                  # per-request starts [B]
+        pos = _extend_positions(start, s_new)    # [B, S_new]
+        idx = jnp.mod(pos, length) if windowed \
+            else jnp.clip(pos, 0, length - 1)
+        bidx = jnp.arange(new_k.shape[0])[:, None]
+        k = cache["k"].at[bidx, idx].set(new_k)
+        v = cache["v"].at[bidx, idx].set(new_v)
+        if windowed:
+            sp = cache["slot_pos"].at[bidx, idx].set(pos)
+            return dict(cache, k=k, v=v, slot_pos=sp)
+        return dict(cache, k=k, v=v)
     if windowed:
         idx = jnp.mod(start + jnp.arange(s_new), length)
         k = cache["k"].at[:, idx].set(new_k)
@@ -301,11 +323,12 @@ def _cache_write_extend(cache, new_k, new_v, start, windowed):
 
 
 def append_attention(p, x, cos, sin, cfg, cache, start, *, window=0):
-    """Multi-token cache continuation: x [B,S_new,d] appended at scalar
-    ``start``; attends causally against the whole cache (prefix + chunk).
+    """Multi-token cache continuation: x [B,S_new,d] appended at ``start``
+    (scalar, or [B] per-request starts); attends causally against the whole
+    cache (prefix + chunk).
 
-    Enables Sarathi-style chunked prefill and RadixAttention prefix reuse
-    on the dense-slot engine."""
+    Enables Sarathi-style chunked prefill, RadixAttention prefix reuse, and
+    batched speculative block verification on the dense-slot engine."""
     b, s_new, _ = x.shape
     q, k, v = qkv_proj(p, x)
     if cos is not None:
@@ -315,21 +338,35 @@ def append_attention(p, x, cos, sin, cfg, cache, start, *, window=0):
     cache = _cache_write_extend(cache, k, v, start, windowed)
     k_pos = (cache["slot_pos"] if windowed
              else jnp.arange(cache["k"].shape[1], dtype=jnp.int32))
-    q_pos = start + jnp.arange(s_new, dtype=jnp.int32)
+    q_pos = _extend_positions(start, s_new)
     qg = _grouped(q, cfg.num_kv_heads)
-    o = simple_sdpa(qg, cache["k"], cache["v"], q_pos=q_pos[None],
+    o = simple_sdpa(qg, cache["k"], cache["v"], q_pos=q_pos,
                     k_pos=k_pos, causal=True, window=window)
     return out_proj(p, o), cache
 
 
 def mla_append_attention(p, x, cos, sin, cfg, cache, start, *, window=0):
-    """MLA chunk continuation against the latent cache."""
+    """MLA chunk continuation against the latent cache. ``start`` scalar or
+    [B] per-request block offsets (batched speculative verify)."""
     b, s_new, _ = x.shape
     q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)
     ckv_t, k_rope_t = _mla_latent(p, x, cfg, cos, sin)
     windowed = "slot_pos" in cache
     length = cache["ckv"].shape[1]
-    if windowed:
+    if jnp.asarray(start).ndim:              # per-request starts [B]
+        pos = _extend_positions(start, s_new)
+        idx = jnp.mod(pos, length) if windowed \
+            else jnp.clip(pos, 0, length - 1)
+        bidx = jnp.arange(b)[:, None]
+        cache = dict(cache,
+                     ckv=cache["ckv"].at[bidx, idx].set(ckv_t),
+                     k_rope=cache["k_rope"].at[bidx, idx].set(k_rope_t))
+        if windowed:
+            cache = dict(cache,
+                         slot_pos=cache["slot_pos"].at[bidx, idx].set(pos))
+        k_pos = (cache["slot_pos"] if windowed
+                 else jnp.arange(length, dtype=jnp.int32)[None])
+    elif windowed:
         idx = jnp.mod(start + jnp.arange(s_new), length)
         cache = dict(cache,
                      ckv=cache["ckv"].at[:, idx].set(ckv_t),
@@ -358,7 +395,7 @@ def mla_append_attention(p, x, cos, sin, cfg, cache, start, *, window=0):
     kflat = kfull
     q = jnp.concatenate([q_nope, q_rope], -1)
     qg = q.reshape(b_, s_new, h, 1, q.shape[-1])
-    q_pos = (start + jnp.arange(s_new, dtype=jnp.int32))[None]
+    q_pos = _extend_positions(start, s_new)
     o = simple_sdpa(qg, kflat, vfull, q_pos=q_pos, k_pos=k_pos,
                     causal=True, window=window)
     out = jnp.einsum("bshe,hed->bsd", o, p["wo"],

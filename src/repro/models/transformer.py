@@ -668,11 +668,14 @@ class Model:
                window: Optional[int] = None,
                moe_cap: Optional[float] = 1.25):
         """Chunked continuation: score ``tokens [B,S_new]`` appended to an
-        existing cache at scalar offset ``start``.
+        existing cache at offset ``start`` -- a scalar (whole batch extends
+        from the same position) or [B] per-request offsets (each row's
+        block lands at its own cache position).
 
         Powers Sarathi-style chunked prefill, RadixAttention prefix reuse
         (skip the cached prefix, extend with the suffix), and speculative-
-        decoding verification (score the draft block in one pass).
+        decoding verification (score the draft block in one pass; the [B]
+        form is the engine's batched multi-slot verify).
         Supported for attention-cache families (dense / vlm / moe / audio
         self-attn); SSM/hybrid prefill is already O(1)-state streaming.
         """
@@ -683,8 +686,8 @@ class Model:
         window = (window or 0)
         x = L.embed_tokens(params["embed"], tokens)
         b, s_new = tokens.shape
-        positions = start + jnp.arange(s_new, dtype=jnp.int32)[None]
-        positions = jnp.broadcast_to(positions, (b, s_new))
+        positions = jnp.broadcast_to(
+            attn._extend_positions(start, s_new), (b, s_new))
         cos, sin = self._cos_sin(b, positions)
 
         def make_body(lcfg):

@@ -1,0 +1,237 @@
+"""Batched speculative decoding + per-request decoder mixing (PR tentpole).
+
+Golden-equivalence contract: promoting speculative / early-exit from
+batch-1 adapters to batched slot strategies must NOT change a single
+emitted token --
+
+  * batched speculative (many slots per jitted draft/verify call) is
+    bit-identical to the standalone ``speculative_generate`` driver and to
+    greedy decoding at temperature 0, per compression preset,
+  * per-request decoder mixing in ONE engine reproduces each strategy's
+    dedicated single-strategy run,
+  * edge cases: prefix-cache + speculative interaction, eos emitted
+    mid-accepted-block (the engine truncates the block at eos),
+  * the prefix cache is true LRU (hits move-to-end; regression test).
+"""
+import numpy as np
+import pytest
+
+from repro.api import (EngineConfig, GenerationConfig, LVLM, Request)
+from repro.core.decoding.speculative import speculative_generate
+from repro.core.serving import Engine
+from repro.core.token_compression.policy import compress_visual_tokens
+
+MAX_NEW = 8
+GAMMA = 3
+
+
+@pytest.fixture(scope="module")
+def lvlm():
+    return LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    return LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.RandomState(7)
+    return [list(rng.randint(1, 512, size=n)) for n in (12, 9, 15)]
+
+
+# ------------------------------------------------- golden equivalence --
+
+
+def test_batched_spec_matches_standalone_and_greedy(lvlm, prompts):
+    """>= 2 speculative slots share each jitted draft/verify round, and
+    every request's tokens are bit-identical to BOTH the standalone driver
+    and the greedy stream."""
+    gen = GenerationConfig(decoder="speculative", temperature=0.0,
+                           max_new_tokens=MAX_NEW, gamma=GAMMA)
+    outs = lvlm.generate(prompts, gen)
+    assert outs[0].stats["max_slots_per_round"] >= 2
+    refs = lvlm.generate(prompts, GenerationConfig(
+        decoder="greedy", max_new_tokens=MAX_NEW))
+    for o, ref, p in zip(outs, refs, prompts):
+        assert o.tokens == ref.tokens
+        toks, _ = speculative_generate(
+            lvlm.model, lvlm.model, lvlm.params, lvlm.params, p,
+            max_new_tokens=MAX_NEW, gamma=GAMMA, temperature=0.0)
+        assert o.tokens == toks
+
+
+@pytest.mark.parametrize("preset", ["none", "fastv-0.5", "divprune-0.5",
+                                    "tome-0.5"])
+def test_batched_spec_matches_greedy_per_preset(vlm, preset):
+    """Per compression preset: batched speculative over a 2-slot VLM batch
+    == greedy under the same preset (acceptance path, temperature 0)."""
+    rng = np.random.RandomState(11)
+    prompts = [list(rng.randint(1, vlm.cfg.vocab_size, size=n))
+               for n in (10, 7)]
+    ves = [rng.randn(vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+                     ).astype(np.float32) * 0.02 for _ in prompts]
+    spec = vlm.generate(prompts, GenerationConfig(
+        decoder="speculative", temperature=0.0, max_new_tokens=6,
+        gamma=GAMMA, compression=preset), visual_embeds=ves)
+    ref = vlm.generate(prompts, GenerationConfig(
+        decoder="greedy", max_new_tokens=6, compression=preset),
+        visual_embeds=ves)
+    assert spec[0].stats["max_slots_per_round"] >= 2
+    for s, r in zip(spec, ref):
+        assert s.tokens == r.tokens, preset
+
+
+def test_batched_spec_matches_standalone_driver_compressed_vlm(vlm):
+    """Engine-batched speculative under a pruning preset == the standalone
+    driver fed the same (pre-compressed) visual tokens."""
+    rng = np.random.RandomState(13)
+    prompt = list(rng.randint(1, vlm.cfg.vocab_size, size=9))
+    ve = rng.randn(vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+                   ).astype(np.float32) * 0.02
+    gen = GenerationConfig(decoder="speculative", temperature=0.0,
+                           max_new_tokens=6, gamma=GAMMA,
+                           compression="fastv-0.5")
+    out = vlm.generate(prompt, gen, visual_embeds=ve)
+    cc = gen.resolved_compression()
+    ve_c, _, _ = compress_visual_tokens(cc, np.asarray(ve)[None], query=None)
+    toks, _ = speculative_generate(
+        vlm.model, vlm.model, vlm.params, vlm.params, prompt,
+        max_new_tokens=6, gamma=GAMMA, temperature=0.0,
+        visual_embeds=np.asarray(ve_c[0]))
+    assert out.tokens == toks
+
+
+def test_kv_presets_reject_speculative(lvlm, prompts):
+    """Live KV compaction and speculative verify are not composable; the
+    incompatibility must surface as a clean error, not corruption."""
+    with pytest.raises(ValueError):
+        lvlm.generate(prompts[0], GenerationConfig(
+            decoder="speculative", max_new_tokens=4,
+            compression="streaming-kv"))
+
+
+# ------------------------------------------------- per-request mixing --
+
+
+def test_mixed_strategies_single_engine(lvlm, prompts):
+    """ONE engine serves greedy + sampling + speculative + early-exit
+    requests concurrently; each request's tokens equal its dedicated
+    single-strategy run; mixed stats are strategy-prefixed."""
+    decs = ["greedy", "speculative", "early_exit", "speculative",
+            "sampling", None]
+    reqs = [Request(rid=i, tokens=list(prompts[i % 3]),
+                    max_new_tokens=MAX_NEW, decoder=d)
+            for i, d in enumerate(decs)]
+    gen = GenerationConfig(decoder="greedy", temperature=0.0,
+                           max_new_tokens=MAX_NEW, gamma=GAMMA)
+    rep = lvlm.serve(reqs, EngineConfig(max_batch=6, cache_len=64,
+                                        temperature=0.0), gen=gen)
+    assert rep.stats["finished"] == len(reqs)
+    # both speculative requests decoded in the SAME jitted rounds
+    assert rep.stats["speculative/max_slots_per_round"] >= 2
+    assert "early_exit/exit_rate" in rep.stats
+    by_rid = {r.rid: r.generated for r in rep.requests}
+    for i, d in enumerate(decs):
+        ref = lvlm.generate(prompts[i % 3], gen.with_(
+            decoder=d if d is not None else "greedy"))
+        assert by_rid[i] == ref.tokens, (i, d)
+
+
+def test_per_request_spec_capacity_margin(lvlm):
+    """Speculative slots reserve gamma lookahead: a request that fits
+    greedily but whose verify block would collide with the scratch
+    position must be rejected at submit."""
+    eng = Engine(lvlm.model, lvlm.params,
+                 EngineConfig(max_batch=1, cache_len=32, decoder="greedy"))
+    fits = Request(rid=0, tokens=list(range(1, 24)), max_new_tokens=8)
+    eng.submit(fits)                                # 23 + 8 == cache_len-1
+    tight = Request(rid=1, tokens=list(range(1, 24)), max_new_tokens=8,
+                    decoder="speculative")
+    with pytest.raises(ValueError):
+        eng.submit(tight)                           # + gamma lookahead > cap
+    assert tight.lookahead > 0                      # resolved before reject
+
+
+def test_greedy_default_routes_and_keeps_sampling_temperature(lvlm, prompts):
+    """Regression: a greedy DEFAULT must register under 'greedy' (not the
+    class-level 'sampling' name) and must not zero the engine temperature
+    -- per-request sampling overrides keep the caller's temperature."""
+    reqs = [Request(rid=0, tokens=list(prompts[0]), max_new_tokens=4),
+            Request(rid=1, tokens=list(prompts[0]), max_new_tokens=4,
+                    decoder="sampling")]
+    rep = lvlm.serve(reqs, EngineConfig(max_batch=2, cache_len=64),
+                     gen=GenerationConfig(decoder="greedy", temperature=0.9,
+                                          max_new_tokens=4))
+    eng = rep.engine
+    assert eng._default_name == "greedy"
+    assert getattr(eng._decoders["greedy"], "greedy", False)
+    assert not getattr(eng._decoders["sampling"], "greedy", True)
+    assert eng._decoders["greedy"] is not eng._decoders["sampling"]
+    assert eng.ec.temperature == 0.9          # raw temp reaches the engine
+    # greedy request still argmax-exact despite the non-zero temperature
+    ref = lvlm.generate(prompts[0], GenerationConfig(decoder="greedy",
+                                                     max_new_tokens=4))
+    assert {r.rid: r.generated for r in rep.requests}[0] == ref.tokens
+
+
+# -------------------------------------------------------- edge cases --
+
+
+def test_spec_with_prefix_cache_matches_and_hits(lvlm):
+    """Prefix reuse composes with batched speculative: identical tokens
+    with the cache on, and real block hits."""
+    rng = np.random.RandomState(17)
+    shared = list(rng.randint(1, 512, size=16))
+    prompts = [shared + list(rng.randint(1, 512, size=4)) for _ in range(3)]
+    gen = GenerationConfig(decoder="speculative", temperature=0.0,
+                           max_new_tokens=6, gamma=GAMMA)
+    base = lvlm.generate(prompts, gen)
+    cached = lvlm.generate(prompts, gen, engine_cfg=EngineConfig(
+        max_batch=3, cache_len=64, prefix_cache=True, prefix_block=8))
+    for b, c in zip(base, cached):
+        assert b.tokens == c.tokens
+    assert cached[0].stats["prefix_hit_tokens"] > 0
+
+
+def test_eos_mid_accepted_block_truncates(lvlm, prompts):
+    """eos inside an accepted speculative block: the engine must cut the
+    block at eos -- nothing is appended past DONE."""
+    ref = lvlm.generate(prompts[0], GenerationConfig(
+        decoder="greedy", max_new_tokens=MAX_NEW))
+    # pick an eos whose FIRST occurrence lands strictly inside the first
+    # accepted block (tokens 1..gamma emitted by round 1's verify)
+    k = next(i for i in range(1, GAMMA)
+             if ref.tokens.index(ref.tokens[i]) == i)
+    eos = ref.tokens[k]
+    out = lvlm.generate(prompts[0], GenerationConfig(
+        decoder="speculative", temperature=0.0, max_new_tokens=MAX_NEW,
+        gamma=GAMMA, eos_id=eos))
+    assert out.tokens == ref.tokens[:k + 1]
+    assert out.tokens[-1] == eos
+    assert eos not in out.tokens[:-1]
+    assert len(out.tokens) < MAX_NEW
+
+
+# ----------------------------------------------------- prefix LRU fix --
+
+
+def test_prefix_cache_true_lru_eviction(lvlm):
+    """Regression: eviction must be LRU (hits move-to-end), not insertion
+    order -- a recently-hit old entry survives, the stale one is evicted."""
+    eng = Engine(lvlm.model, lvlm.params,
+                 EngineConfig(max_batch=1, cache_len=64, prefix_cache=True,
+                              prefix_block=4, prefix_cap=2))
+    a = list(range(1, 9))                     # 8 tokens -> one 8-key
+    b = list(range(101, 109))
+    c = list(range(201, 209))
+    eng._prefix_insert(a, 0, 8)
+    eng._prefix_insert(b, 0, 8)
+    hit_k, hit = eng._prefix_lookup(a + [99])   # LRU touch on A
+    assert hit_k == 8 and hit is not None
+    eng._prefix_insert(c, 0, 8)                 # cap 2: evicts B, not A
+    assert eng._prefix_lookup(a + [99])[0] == 8
+    assert eng._prefix_lookup(b + [99])[0] == 0
+    assert eng._prefix_lookup(c + [99])[0] == 8
+    assert len(eng._prefix) == 2

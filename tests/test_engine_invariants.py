@@ -1,0 +1,132 @@
+"""Property-based engine invariants under mixed-strategy workloads.
+
+Random request mixes (arrival times, prompt lengths, per-request decoders,
+eos placement, scheduler, temperature) must never:
+
+  * overflow the slot cache (active writes stay <= cache_len-1, with the
+    speculative lookahead margin respected),
+  * double-free / double-assign a slot,
+  * strand a request (every submit retires exactly once, with monotone
+    arrival <= first_token_time <= finish_time),
+  * append tokens past an emitted eos.
+
+Runs under the real jitted smoke model via ``tests/_hypothesis_compat``:
+the real ``hypothesis`` library when installed, its seeded random-draw
+shim otherwise (CI exercises both).
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.serving import Engine, EngineConfig, Request
+from repro.models import build
+
+MAX_BATCH = 3
+CACHE_LEN = 48
+GAMMA = 2
+VOCAB = 32          # tiny vocab so random eos ids actually fire
+_MODEL = {}
+
+
+def small_model():
+    if not _MODEL:
+        cfg = get_config("phi4-mini-3.8b", smoke=True).with_(
+            vocab_size=VOCAB)
+        model = build(cfg)
+        _MODEL["m"] = (model, model.init(jax.random.PRNGKey(0)))
+    return _MODEL["m"]
+
+
+REQ = st.tuples(
+    st.sampled_from((3, 5, 8)),                          # prompt length
+    st.integers(1, 5),                                   # max_new_tokens
+    st.floats(0.0, 0.02),                                # arrival
+    st.sampled_from((None, "greedy", "sampling",
+                     "speculative", "early_exit")),      # per-request decoder
+)
+
+
+def _run_and_check(reqspecs, scheduler, temperature, eos_id, seed):
+    model, params = small_model()
+    eng = Engine(model, params, EngineConfig(
+        max_batch=MAX_BATCH, cache_len=CACHE_LEN, scheduler=scheduler,
+        chunk_size=4, token_budget=16, temperature=temperature,
+        eos_id=eos_id, seed=seed, decoder="greedy"))
+    # parameterize the lazily-resolved speculative strategy via registry
+    from repro.api.decoders import SpeculativeDecoder
+    eng._decoders["speculative"] = SpeculativeDecoder(gamma=GAMMA)
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i, (plen, new, arrival, dec) in enumerate(reqspecs):
+        reqs.append(Request(
+            rid=i, tokens=list(rng.randint(1, VOCAB, size=plen)),
+            max_new_tokens=new, arrival=arrival, decoder=dec))
+        eng.submit(reqs[-1])
+    steps = 0
+    while True:
+        alive = eng.step()
+        steps += 1
+        assert steps < 2000, "engine failed to drain"
+        # -- slot-assignment invariants (checked EVERY iteration) ----------
+        active_slots = [r._slot for r in eng.running]
+        assert len(active_slots) == len(set(active_slots)), \
+            "two running requests share a slot"
+        for r in eng.running:
+            s = r._slot
+            assert eng.slot_req[s] is r, "slot map out of sync"
+            # cache-overflow invariant: the next write (plus speculative
+            # lookahead) stays clear of the end; position cache_len-1 is
+            # the reserved inactive-slot scratch
+            assert int(eng.slot_pos[s]) + r.lookahead <= CACHE_LEN - 1, \
+                (r.rid, int(eng.slot_pos[s]), r.lookahead)
+        if not alive:
+            break
+    # -- retirement invariants ---------------------------------------------
+    assert len(eng.finished) == len(reqs), "request stranded or duplicated"
+    rids = [r.rid for r in eng.finished]
+    assert sorted(rids) == sorted(r.rid for r in reqs)
+    assert len(set(rids)) == len(rids), "double-retire (slot double-free)"
+    assert all(sr is None for sr in eng.slot_req), "slot leaked"
+    for r in eng.finished:
+        assert 1 <= len(r.generated) <= r.max_new_tokens
+        assert r.first_token_time is not None
+        assert r.finish_time is not None
+        assert r.arrival <= r.first_token_time <= r.finish_time, \
+            (r.rid, r.arrival, r.first_token_time, r.finish_time)
+        if eos_id >= 0:
+            # nothing may be appended past an emitted eos
+            assert eos_id not in r.generated[:-1], (r.rid, r.generated)
+
+
+@settings(max_examples=5, deadline=None, derandomize=True)
+@given(reqspecs=st.lists(REQ, min_size=1, max_size=4),
+       scheduler=st.sampled_from(("continuous", "chunked", "mlfq",
+                                  "static")),
+       temperature=st.sampled_from((0.0, 0.7)),
+       eos_id=st.sampled_from((-1, 5)),
+       seed=st.integers(0, 10_000))
+def test_engine_invariants_random_mixes(reqspecs, scheduler, temperature,
+                                        eos_id, seed):
+    _run_and_check(reqspecs, scheduler, temperature, eos_id, seed)
+
+
+def test_engine_invariants_all_speculative_eos():
+    """Deterministic corner: an all-speculative batch with an eos id that
+    fires inside accepted blocks still satisfies every invariant."""
+    _run_and_check([(5, 5, 0.0, "speculative"),
+                    (8, 4, 0.0, "speculative"),
+                    (3, 5, 0.001, "speculative")],
+                   "continuous", 0.0, 5, 3)
+
+
+def test_submit_rejects_overflowing_lookahead():
+    model, params = small_model()
+    eng = Engine(model, params, EngineConfig(max_batch=1,
+                                             cache_len=CACHE_LEN,
+                                             decoder="greedy"))
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, tokens=list(range(1, CACHE_LEN - 8)),
+                           max_new_tokens=8, decoder="speculative"))
