@@ -6,16 +6,30 @@ Real engine, real smoke model, virtual-clock metrics:
   * prefix caching on shared-system-prompt traffic,
   * per-request decoder mixing: greedy + sampling + speculative +
     early-exit requests in ONE engine run (batched speculative slots),
+  * open-loop Poisson traffic through the ASYNC streaming server
+    (admission watermarks, mixed decoders, TTFT/TPOT percentiles + SLO
+    attainment, emitted as a ``# open_loop`` JSON record),
   * disaggregated vs colocated pools under KV-transfer cost (analytic sim).
+
+Latency rows report percentiles (p50/p95/p99), not just means.
 """
 from __future__ import annotations
+
+import asyncio
+import json
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.api import EngineConfig, GenerationConfig, LVLM, Request
+from repro.api import (AdmissionConfig, EngineConfig, GenerationConfig, LVLM,
+                       Request)
 from repro.core.serving import (CostModel, PoolConfig, goodput,
                                 simulate_colocated, simulate_disaggregated)
+
+
+def _pcts(out, metric: str) -> str:
+    return ";".join(f"{metric}_p{p}={out.get(f'{metric}_p{p}') or 0:.4f}"
+                    for p in (50, 95, 99))
 
 
 def _reqs(cfg, n, seed=0, shared=0, lo=10, hi=60, new=8, gap=0.001):
@@ -33,7 +47,7 @@ def schedulers(lvlm: LVLM) -> None:
             EngineConfig(max_batch=4, cache_len=128, scheduler=sched,
                          chunk_size=16, token_budget=48)).stats
         emit(f"serve/sched/{sched}", out["virtual_time_s"] * 1e6,
-             f"ttft_mean={out['ttft_mean']:.4f};"
+             f"{_pcts(out, 'ttft')};{_pcts(out, 'tpot')};"
              f"jct_mean={out['jct_mean']:.4f};"
              f"tput={out['throughput_tok_per_s']:.0f}")
 
@@ -48,7 +62,7 @@ def prefix_cache(lvlm: LVLM) -> None:
                  if on else "")
         emit(f"serve/prefix_cache/{'on' if on else 'off'}",
              out["virtual_time_s"] * 1e6,
-             extra + f"ttft_mean={out['ttft_mean']:.4f}")
+             extra + _pcts(out, 'ttft'))
 
 
 def mixed_decoders(lvlm: LVLM) -> None:
@@ -73,9 +87,55 @@ def mixed_decoders(lvlm: LVLM) -> None:
                 if label == "mixed" else "")
         emit(f"serve/mixed_decoders/{label}",
              out["virtual_time_s"] * 1e6,
-             spec + f"ttft_mean={out['ttft_mean']:.4f};"
+             spec + f"{_pcts(out, 'ttft')};{_pcts(out, 'tpot')};"
              f"jct_mean={out['jct_mean']:.4f};"
              f"tput={out['throughput_tok_per_s']:.0f}")
+
+
+def open_loop(lvlm: LVLM) -> None:
+    """Open-loop Poisson traffic through the ASYNC streaming server:
+    requests arrive over (virtual) time at a fixed rate, mixed decoder
+    strategies, KV-watermark admission control, streaming clients. The
+    metric that matters for a serving system: tail TTFT/TPOT and SLO
+    attainment under load, not the closed-batch makespan."""
+    rng = np.random.RandomState(9)
+    strategies = ("speculative", "greedy", "sampling", "greedy")
+    for label, rate in (("r500", 500.0), ("r2000", 2000.0)):
+        reqs = _reqs(lvlm.cfg, 16, seed=10, lo=8, hi=24, new=8)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
+        for i, r in enumerate(reqs):
+            r.arrival = float(arrivals[i])
+            r.decoder = strategies[i % len(strategies)]
+        server = lvlm.serve_async(
+            EngineConfig(max_batch=4, cache_len=128, temperature=0.0),
+            gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                 max_new_tokens=8, gamma=3),
+            admission=AdmissionConfig(high_watermark=0.9,
+                                      low_watermark=0.7))
+
+        async def drive(server=server, reqs=reqs):
+            async def consume(r):
+                return [t async for t in server.submit(r)]
+            async with server:
+                await asyncio.gather(*(consume(r) for r in reqs))
+            return server.summary()
+
+        out = asyncio.run(drive())
+        emit(f"serve/open_loop/{label}", out["virtual_time_s"] * 1e6,
+             f"{_pcts(out, 'ttft')};{_pcts(out, 'tpot')};"
+             f"slo_goodput={out['slo_goodput']:.2f};"
+             f"queue_wait_p95={out.get('queue_wait_p95') or 0:.4f};"
+             f"deferred={out['deferred']}")
+        record = {"scenario": f"open_loop/{label}", "rate_rps": rate,
+                  "finished": out["finished"], "aborted": out["aborted"],
+                  "slo_ttft_attainment": out["slo_ttft_attainment"],
+                  "slo_tpot_attainment": out["slo_tpot_attainment"],
+                  "slo_goodput": out["slo_goodput"],
+                  "deferred": out["deferred"],
+                  "virtual_time_s": out["virtual_time_s"]}
+        record.update({k: out[k] for k in out
+                       if k.startswith(("ttft_p", "tpot_p", "queue_wait_"))})
+        print("# open_loop " + json.dumps(record, default=float), flush=True)
 
 
 def disaggregation() -> None:
@@ -107,6 +167,7 @@ def run() -> None:
     schedulers(lvlm)
     prefix_cache(lvlm)
     mixed_decoders(lvlm)
+    open_loop(lvlm)
     disaggregation()
 
 

@@ -1,64 +1,82 @@
-"""Serve a VLM with and without visual token compression, comparing
-virtual-clock latency and output drift -- the survey's dim-1 trade-off.
+"""Serve a VLM to concurrent STREAMING clients through the async serving
+layer -- requests with visual tokens and mixed decoder strategies share one
+engine, tokens stream per client as the engine emits them, one client
+hangs up mid-stream (freeing its KV slot, speculative draft row, and
+reserved lookahead), and the SLO telemetry reports tail latency:
 
     PYTHONPATH=src python examples/serve_vlm.py
 """
-import jax
+import asyncio
+
 import numpy as np
 
-from repro.configs import get_config
-from repro.configs.base import CompressionConfig
-from repro.core.serving import Engine, EngineConfig, Request
-from repro.models import build
+from repro.api import (AdmissionConfig, EngineConfig, GenerationConfig,
+                       LVLM, Request)
 
 
-def requests(cfg, n=8, seed=0):
+def make_requests(cfg, n=6, seed=0):
     rng = np.random.RandomState(seed)
     # structured "images": few textures + noise => redundancy to exploit
     centers = rng.randn(4, cfg.d_model) * 0.5
-    out = []
+    strategies = ("speculative", "greedy", "speculative",
+                  "sampling", "greedy", "speculative")
+    reqs = []
     for i in range(n):
         nv = cfg.num_visual_tokens
         ve = (centers[rng.randint(4, size=nv)]
               + 0.05 * rng.randn(nv, cfg.d_model)).astype(np.float32)
-        out.append(Request(
+        reqs.append(Request(
             rid=i, tokens=list(rng.randint(1, cfg.vocab_size, size=16)),
-            visual_embeds=ve, max_new_tokens=8))
-    return out
+            visual_embeds=ve, max_new_tokens=12,
+            decoder=strategies[i % len(strategies)]))
+    return reqs
+
+
+async def client(server, req, cancel_after=None):
+    """One streaming consumer; ``cancel_after`` hangs up mid-stream."""
+    stream = server.submit(req)
+    toks = []
+    async for tok in stream:
+        toks.append(tok)
+        if cancel_after is not None and len(toks) >= cancel_after:
+            stream.cancel()                      # frees slot + draft row
+            break
+    tag = "cancelled" if stream.aborted else "done"
+    print(f"client {req.rid} [{req.decoder:12s}] {tag:9s} "
+          f"{len(toks):2d} tokens: {toks}")
+    return toks
+
+
+async def main_async():
+    lvlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+    server = lvlm.serve_async(
+        EngineConfig(max_batch=4, cache_len=160, temperature=0.0),
+        gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                             max_new_tokens=12, gamma=3,
+                             compression="divprune-0.5"),
+        admission=AdmissionConfig(high_watermark=0.85, low_watermark=0.6))
+    reqs = make_requests(lvlm.cfg)
+    async with server:
+        await asyncio.gather(
+            *(client(server, r, cancel_after=3 if r.rid == 2 else None)
+              for r in reqs))
+    s = server.summary()
+    print(f"\nserved {s['finished']} requests ({s['aborted']} cancelled) "
+          f"in {s['virtual_time_s'] * 1e3:.2f} virtual ms; "
+          f"admission deferred {s['deferred']}")
+    print(f"TTFT p50/p95/p99: {s['ttft_p50']:.4f}/{s['ttft_p95']:.4f}/"
+          f"{s['ttft_p99']:.4f} s   "
+          f"TPOT p50/p95/p99: {s['tpot_p50']:.5f}/{s['tpot_p95']:.5f}/"
+          f"{s['tpot_p99']:.5f} s")
+    print(f"SLO attainment: ttft={s['slo_ttft_attainment']:.2f} "
+          f"tpot={s['slo_tpot_attainment']:.2f} "
+          f"goodput={s['slo_goodput']:.2f}")
+    print(f"decode cost by strategy group: "
+          f"{ {k: round(v, 6) for k, v in s['decode_cost_by_group'].items()} }")
 
 
 def main():
-    cfg = get_config("qwen2-vl-2b", smoke=True)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-
-    results = {}
-    for label, cc in (
-            ("full", CompressionConfig()),
-            ("divprune50", CompressionConfig(token_pruner="divprune",
-                                             keep_ratio=0.5)),
-            ("fastv-l2-25", CompressionConfig(token_pruner="l2",
-                                              keep_ratio=0.25))):
-        eng = Engine(model, params, EngineConfig(
-            max_batch=4, cache_len=128, compression=cc))
-        for r in requests(cfg):
-            eng.submit(r)
-        stats = eng.run()
-        gen = {r.rid: tuple(r.generated) for r in eng.finished}
-        results[label] = (stats, gen)
-        print(f"{label:12s} virtual_time={stats['virtual_time_s']:.4f}s "
-              f"ttft={stats['ttft_mean']:.4f} visual_tokens="
-             f"{int(eng.slot_nv.max())}")
-
-    full_gen = results["full"][1]
-    for label in ("divprune50", "fastv-l2-25"):
-        gen = results[label][1]
-        agree = np.mean([full_gen[i] == gen[i] for i in full_gen])
-        tok_agree = np.mean([
-            np.mean(np.array(full_gen[i]) == np.array(gen[i]))
-            for i in full_gen])
-        print(f"{label:12s} exact-match={agree:.2f} "
-              f"token-agreement={tok_agree:.2f} (vs full)")
+    asyncio.run(main_async())
 
 
 if __name__ == "__main__":

@@ -16,10 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.api import LVLM
 from repro.core.kv_cache.selection import select_streaming
 from repro.core.token_compression import video as V
-from repro.models import build
 
 
 def synthetic_stream(n_clips, frames=8, patches=16, d=256, seed=0):
@@ -36,12 +35,12 @@ def synthetic_stream(n_clips, frames=8, patches=16, d=256, seed=0):
 
 
 def main():
-    cfg = get_config("qwen2-vl-2b", smoke=True)
-    # position-exact ring cache (slot_pos) so compaction keeps RoPE honest
+    # position-exact ring cache (slot_pos) so compaction keeps RoPE honest;
+    # the facade's config overrides plumb sliding_window straight through
     cache_len = 192
-    cfg = cfg.with_(sliding_window=cache_len)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    lvlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True,
+                                sliding_window=cache_len)
+    cfg, model, params = lvlm.cfg, lvlm.model, lvlm.params
 
     budget_hi, budget_lo = 48, 8             # tokens per clip
     kv_budget = 128                           # compaction target

@@ -32,6 +32,11 @@ from repro.api.lvlm import LVLM, GenerationResult, ServeResult
 from repro.configs.base import CompressionConfig
 from repro.core.serving import EngineConfig, Request
 
+# async serving layer (repro.serving is facade-independent; re-exported
+# here so `LVLM.serve_async` callers get the config types from one place)
+from repro.serving import (AdmissionConfig, AsyncLVLMServer,
+                           MetricsRegistry, TokenStream)
+
 __all__ = [
     "LVLM", "GenerationConfig", "GenerationResult", "ServeResult",
     "DECODERS", "DECODER_NAMES", "make_decoder",
@@ -39,4 +44,5 @@ __all__ = [
     "EarlyExitDecoder",
     "COMPRESSION_PRESETS", "resolve_compression", "CompressionConfig",
     "EngineConfig", "Request",
+    "AsyncLVLMServer", "TokenStream", "AdmissionConfig", "MetricsRegistry",
 ]

@@ -184,6 +184,18 @@ class SpeculativeDecoder:
             raise ValueError("speculative needs extend(); attention "
                              "families only")
 
+    def bound_slots(self) -> set:
+        """Draft-pool slots currently bound to a live request (abort and
+        retire release them via ``release_slot``)."""
+        return set(self._slot_req)
+
+    def release_slot(self, slot: int) -> None:
+        """Engine lifecycle hook: drop the draft-pool binding for a slot
+        whose request retired or was aborted. The next request on this
+        slot re-prefills its draft row (stale tail entries stay hidden by
+        causal masking until overwritten)."""
+        self._slot_req.pop(slot, None)
+
     def stats(self) -> Dict:
         st = self.stats_
         return {"acceptance": acceptance_rate(st),

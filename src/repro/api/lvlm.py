@@ -32,6 +32,7 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core.serving import Engine, EngineConfig, Request
 from repro.models.registry import build
+from repro.serving import AsyncLVLMServer
 
 Prompt = Sequence[int]
 
@@ -227,6 +228,30 @@ class LVLM:
             served += 1
 
     # ------------------------------------------------------------ serve --
+    def _serve_engine(self, engine_cfg: Optional[EngineConfig] = None,
+                      gen: Optional[GenerationConfig] = None,
+                      draft: Optional["LVLM"] = None) -> Engine:
+        """Serving-engine wiring shared by ``serve`` (sync, closed-loop)
+        and ``serve_async`` (streaming, open-loop): resolve the default
+        strategy + generation knobs onto the EngineConfig and register
+        every named per-request strategy."""
+        ec = engine_cfg if engine_cfg is not None else EngineConfig()
+        g = gen if gen is not None else GenerationConfig(
+            decoder=ec.decoder if ec.decoder in DECODER_NAMES else "sampling",
+            temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
+            eos_id=ec.eos_id, compression=ec.compression)
+        if gen is not None:
+            # raw temperature: the greedy strategy forces 0 per group, so
+            # per-request sampling overrides keep the caller's temperature
+            ec = dataclasses.replace(
+                ec, decoder=gen.decoder,
+                temperature=gen.temperature,
+                top_k=gen.top_k, top_p=gen.top_p, eos_id=gen.eos_id,
+                compression=gen.resolved_compression())
+        decoders = self._strategy_decoders(g, draft)
+        return Engine(self.model, self.params, ec,
+                      decoder=decoders.get(ec.decoder), decoders=decoders)
+
     def serve(self, requests: List[Request],
               engine_cfg: Optional[EngineConfig] = None,
               gen: Optional[GenerationConfig] = None,
@@ -243,25 +268,42 @@ class LVLM:
         ``"speculative/acceptance"``). ``draft`` supplies the speculative
         draft model for both the default and per-request speculative
         requests (None -> self-draft).
+
+        Stats include TTFT/TPOT percentiles (p50/p95/p99), per-request
+        SLO attainment fractions, and the virtual-clock decode cost per
+        strategy group (``decode_cost_by_group``). For open-loop traffic
+        with streaming delivery and cancellation, see ``serve_async``.
         """
-        ec = engine_cfg if engine_cfg is not None else EngineConfig()
-        g = gen if gen is not None else GenerationConfig(
-            decoder=ec.decoder if ec.decoder in DECODER_NAMES else "sampling",
-            temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
-            eos_id=ec.eos_id, compression=ec.compression)
-        if gen is not None:
-            # raw temperature: the greedy strategy forces 0 per group, so
-            # per-request sampling overrides keep the caller's temperature
-            ec = dataclasses.replace(
-                ec, decoder=gen.decoder,
-                temperature=gen.temperature,
-                top_k=gen.top_k, top_p=gen.top_p, eos_id=gen.eos_id,
-                compression=gen.resolved_compression())
-        decoders = self._strategy_decoders(g, draft)
-        eng = Engine(self.model, self.params, ec,
-                     decoder=decoders.get(ec.decoder), decoders=decoders)
+        eng = self._serve_engine(engine_cfg, gen, draft)
         for r in requests:
             eng.submit(r)
         stats = dict(eng.run(), **eng.decoder_stats())
+        stats["decode_cost_by_group"] = dict(eng.group_costs)
         return ServeResult(stats=stats, requests=list(eng.finished),
                            engine=eng)
+
+    def serve_async(self, engine_cfg: Optional[EngineConfig] = None,
+                    gen: Optional[GenerationConfig] = None, *,
+                    draft: Optional["LVLM"] = None,
+                    admission=None, metrics=None) -> AsyncLVLMServer:
+        """Async streaming server over the same engine wiring as ``serve``.
+
+        Returns a ``repro.serving.AsyncLVLMServer``: a background pump over
+        the grouped step loop with per-request async token channels,
+        KV-watermark admission control (backpressure instead of pool
+        exhaustion), mid-stream cancellation that frees every held
+        resource, and per-request TTFT/TPOT/queue-wait SLO telemetry:
+
+            server = lvlm.serve_async(EngineConfig(max_batch=8))
+            async with server:
+                async for tok in server.submit(req):
+                    ...
+
+        ``admission`` is a ``repro.serving.AdmissionConfig`` (high/low KV
+        watermarks, optional max inflight); ``metrics`` an optional shared
+        ``MetricsRegistry``. At temperature 0 the streams are
+        bit-identical to ``serve``'s outputs.
+        """
+        return AsyncLVLMServer(self, engine_cfg=engine_cfg, gen=gen,
+                               draft=draft, admission=admission,
+                               metrics=metrics)

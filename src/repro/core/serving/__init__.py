@@ -5,7 +5,8 @@ public entry point is now ``repro.api`` (``LVLM`` / ``GenerationConfig`` /
 ``EngineConfig``) -- prefer ``LVLM.serve(...)`` over wiring ``Engine``
 by hand.
 """
-from repro.core.serving.request import Request, SLO, State, summarize
+from repro.core.serving.request import (
+    Request, SLO, State, percentiles, slo_attainment, summarize)
 from repro.core.serving.scheduler import (
     SCHEDULERS, IterationPlan, StaticBatcher, ContinuousBatcher,
     MLFQScheduler, ChunkedPrefillScheduler)

@@ -60,6 +60,12 @@ class EngineConfig:
     max_batch: int = 8
     cache_len: int = 256
     scheduler: str = "continuous"
+    # KV token capacity the continuous/mlfq schedulers (and the serving
+    # layer's admission watermarks) budget against; None = the dense slot
+    # pool's size, max_batch * cache_len. Setting it LOWER creates KV
+    # pressure before the slot pool binds -- the admission-deferral tests
+    # and the async server's watermarks use exactly that.
+    kv_capacity_tokens: Optional[int] = None
     chunk_size: int = 32                 # chunked-prefill chunk
     token_budget: int = 128              # chunked-prefill per-iter budget
     temperature: float = 0.0
@@ -188,7 +194,7 @@ class Engine:
         kw: Dict = {}
         if ec.scheduler in ("continuous", "mlfq"):
             kw = dict(max_batch=ec.max_batch,
-                      kv_capacity_tokens=ec.max_batch * ec.cache_len)
+                      kv_capacity_tokens=self.kv_capacity_tokens)
         elif ec.scheduler == "chunked":
             kw = dict(max_batch=ec.max_batch, token_budget=ec.token_budget,
                       chunk_size=ec.chunk_size)
@@ -199,12 +205,19 @@ class Engine:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.finished: List[Request] = []
+        self.aborted: List[Request] = []
         self.clock = 0.0
         self.key = jax.random.PRNGKey(ec.seed)
         self.iters = 0
+        # cumulative decode-phase virtual-clock cost per strategy group
+        # (prefill cost is request-, not strategy-, attributed)
+        self.group_costs: Dict[str, float] = {}
         # prefix cache: host map, longest block-aligned prefix match,
         # true-LRU eviction (lookup hits move-to-end; see _prefix_lookup)
         self._prefix: "OrderedDict[Tuple[int, ...], Tuple]" = OrderedDict()
+        # in-flight pin counts: entries a live request hit stay resident
+        # (LRU eviction skips them); released at retire/abort
+        self._prefix_pins: Dict[Tuple[int, ...], int] = {}
         self.prefix_hit_tokens = 0
         self.prefix_total_tokens = 0
 
@@ -286,6 +299,77 @@ class Engine:
         req.arrival = max(req.arrival, self.clock)
         self.waiting.append(req)
 
+    # -------------------------------------------------- kv accounting --
+    @property
+    def kv_capacity_tokens(self) -> int:
+        """Token capacity admission budgets against (dense pool size unless
+        EngineConfig.kv_capacity_tokens narrows it)."""
+        if self.ec.kv_capacity_tokens is not None:
+            return self.ec.kv_capacity_tokens
+        return self.ec.max_batch * self.ec.cache_len
+
+    def _kv_block(self) -> int:
+        return int(getattr(self.sched, "block_size", 16))
+
+    def kv_request_tokens(self, req: Request) -> int:
+        """Block-rounded KV reservation one request commits the pool to:
+        prompt + max_new + decode lookahead (speculative gamma resolves via
+        the request's strategy even before submit)."""
+        la = req.lookahead
+        if req.decoder is not None or la == 0:
+            _, dec = self._resolve_decoder(req.decoder)
+            la = max(la, int(getattr(dec, "lookahead_tokens", 0)))
+        bs = self._kv_block()
+        need = req.prompt_len + req.max_new_tokens + la
+        return ((need + bs - 1) // bs) * bs
+
+    def kv_committed_tokens(self, include_waiting: bool = True) -> int:
+        """Total KV reservation of live requests (the admission-control
+        pressure signal; returns to baseline after finish/abort)."""
+        live = [r for r in self.running if r.state != State.DONE]
+        if include_waiting:
+            live += [r for r in self.waiting if r.state != State.DONE]
+        return sum(self.kv_request_tokens(r) for r in live)
+
+    # -------------------------------------------------------- lifecycle --
+    def _release_request(self, r: Request) -> None:
+        """Free every resource a request holds: its slot in the main pool,
+        any strategy-held per-slot state (speculative draft-pool row), and
+        its prefix-cache pin. The gamma lookahead reservation is freed
+        implicitly: capacity accounting only counts live requests."""
+        slot = getattr(r, "_slot", None)
+        if slot is not None and self.slot_req[slot] is r:
+            self.slot_req[slot] = None
+            for dec in self._decoders.values():
+                release = getattr(dec, "release_slot", None)
+                if release is not None:
+                    release(slot)
+        key = getattr(r, "_prefix_pin", None)
+        if key is not None:
+            n = self._prefix_pins.get(key, 0) - 1
+            if n > 0:
+                self._prefix_pins[key] = n
+            else:
+                self._prefix_pins.pop(key, None)
+            r._prefix_pin = None
+
+    def abort(self, rid: int) -> bool:
+        """Cancel a request mid-flight (the serving layer's cancellation
+        path). Frees the main KV slot, the speculative draft-pool slot,
+        the reserved lookahead, and any prefix-cache pin; the request is
+        marked ``aborted`` and never reaches ``finished``. Returns False
+        if ``rid`` is unknown or already retired."""
+        for pool in (self.waiting, self.running):
+            for r in pool:
+                if r.rid == rid and r.state != State.DONE:
+                    pool.remove(r)
+                    self._release_request(r)
+                    r.state = State.DONE
+                    r.aborted = True
+                    self.aborted.append(r)
+                    return True
+        return False
+
     # ------------------------------------------------------------- prefix --
     def _prefix_lookup(self, tokens: List[int]) -> Tuple[int, Optional[Tuple]]:
         """Longest block-aligned cached prefix of ``tokens``.
@@ -315,7 +399,13 @@ class Engine:
         snap = jax.tree.map(lambda a: a[:, :, :k], _slot_get(self.pool, slot))
         self._prefix[key] = (snap, k)
         while len(self._prefix) > self.ec.prefix_cap:
-            self._prefix.popitem(last=False)         # evict least recent
+            # least-recent UNPINNED entry; pinned ones (a live request hit
+            # them) stay resident until their requests retire/abort
+            victim = next((c for c in self._prefix
+                           if not self._prefix_pins.get(c)), None)
+            if victim is None:
+                break
+            del self._prefix[victim]
 
     def _install_snap(self, slot: int, snap) -> None:
         def put(a, s):
@@ -364,6 +454,9 @@ class Engine:
                 # always recompute >=1 token so we have last-position logits
                 use = min(hit_k, len(req.tokens) - 1, end - 1)
             if hit is not None and use > 0:
+                key = tuple(req.tokens[:hit_k])
+                self._prefix_pins[key] = self._prefix_pins.get(key, 0) + 1
+                req._prefix_pin = key
                 snap, _k = hit
                 self._install_snap(
                     slot, jax.tree.map(lambda a: a[:, :, :use], snap))
@@ -479,9 +572,11 @@ class Engine:
             emitted_all.update(dec.engine_decode(self, group))
             if self._iter_decode_cost is None:
                 ctx = float(np.mean([self.slot_pos[r._slot] for r in group]))
-                total_cost += self.ec.cost.decode_step_time(len(group), ctx)
+                cost = self.ec.cost.decode_step_time(len(group), ctx)
             else:
-                total_cost += self._iter_decode_cost
+                cost = self._iter_decode_cost
+            total_cost += cost
+            self.group_costs[name] = self.group_costs.get(name, 0.0) + cost
         self._iter_decode_cost = total_cost
         for r in reqs:
             for tok in emitted_all.get(r._slot, ()):
@@ -530,7 +625,7 @@ class Engine:
             if r.state == State.DONE and r.finish_time is None:
                 r.finish_time = self.clock
                 self.finished.append(r)
-                self.slot_req[r._slot] = None
+                self._release_request(r)
         self.running = [r for r in self.running if r.state != State.DONE]
         return True
 

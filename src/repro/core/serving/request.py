@@ -48,6 +48,7 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    aborted: bool = False                   # cancelled via Engine.abort()
     # scheduling metadata
     priority: int = 0                        # MLFQ level
     served_tokens: int = 0
@@ -84,6 +85,35 @@ class Request:
                 / (len(self.generated) - 1))
 
 
+def percentiles(vals: List[float], prefix: str,
+                ps=(50, 95, 99)) -> Dict[str, Optional[float]]:
+    """``{prefix}_p50/p95/p99`` latency summary (None when empty)."""
+    if not vals:
+        return {f"{prefix}_p{p}": None for p in ps}
+    return {f"{prefix}_p{p}": float(np.percentile(vals, p)) for p in ps}
+
+
+def slo_attainment(reqs: List[Request]) -> Dict[str, Optional[float]]:
+    """Fraction of finished requests meeting their OWN per-request SLO
+    targets (``Request.slo``, milliseconds against the virtual clock):
+    TTFT, TPOT, and both at once (DistServe-style goodput fraction)."""
+    done = [r for r in reqs if r.finish_time is not None]
+    if not done:
+        return {"slo_ttft_attainment": None, "slo_tpot_attainment": None,
+                "slo_goodput": None}
+    ttft_ok = tpot_ok = both = 0
+    for r in done:
+        t_ok = (r.ttft() or 0.0) <= r.slo.ttft_ms * 1e-3
+        p_ok = (r.tpot() or 0.0) <= r.slo.tpot_ms * 1e-3
+        ttft_ok += t_ok
+        tpot_ok += p_ok
+        both += t_ok and p_ok
+    n = len(done)
+    return {"slo_ttft_attainment": ttft_ok / n,
+            "slo_tpot_attainment": tpot_ok / n,
+            "slo_goodput": both / n}
+
+
 def summarize(reqs: List[Request]) -> Dict:
     done = [r for r in reqs if r.finish_time is not None]
     if not done:
@@ -93,13 +123,16 @@ def summarize(reqs: List[Request]) -> Dict:
     tpots = [r.tpot() for r in done if r.tpot() is not None]
     tokens = sum(len(r.generated) for r in done)
     makespan = max(r.finish_time for r in done) - min(r.arrival for r in done)
-    return {
+    out = {
         "finished": len(done),
         "tokens": tokens,
         "throughput_tok_per_s": tokens / max(makespan, 1e-9),
         "ttft_mean": float(np.mean(ttfts)) if ttfts else None,
-        "ttft_p99": float(np.percentile(ttfts, 99)) if ttfts else None,
         "jct_mean": float(np.mean(jcts)),
         "tpot_mean": float(np.mean(tpots)) if tpots else None,
         "makespan": makespan,
     }
+    out.update(percentiles(ttfts, "ttft"))
+    out.update(percentiles(tpots, "tpot"))
+    out.update(slo_attainment(done))
+    return out

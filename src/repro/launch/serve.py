@@ -7,16 +7,22 @@ through the unified ``repro.api`` facade.
     # decoder strategies (all batched; speculative slots share each
     # jitted draft/verify round):
     PYTHONPATH=src python -m repro.launch.serve --decoder speculative
+
+    # open-loop async serving: Poisson arrivals at --open-loop req/s
+    # (virtual clock) through AsyncLVLMServer, with KV-watermark admission
+    # control; the JSON report adds queue-wait and admission counters:
+    PYTHONPATH=src python -m repro.launch.serve --open-loop 2000
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 
 import numpy as np
 
-from repro.api import (EngineConfig, GenerationConfig, LVLM, Request,
-                       resolve_compression)
+from repro.api import (AdmissionConfig, EngineConfig, GenerationConfig, LVLM,
+                       Request, resolve_compression)
 from repro.configs import ARCHS
 
 
@@ -60,6 +66,13 @@ def main() -> int:
     ap.add_argument("--gamma", type=int, default=4,
                     help="speculative draft length")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--open-loop", type=float, default=0.0, metavar="RATE",
+                    help="serve via the async server with Poisson arrivals "
+                         "at RATE req/s (virtual clock); 0 = closed loop")
+    ap.add_argument("--high-watermark", type=float, default=0.9,
+                    help="admission high KV watermark (fraction of pool)")
+    ap.add_argument("--low-watermark", type=float, default=0.7,
+                    help="admission low (drain) KV watermark")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower/compile decode_32k under the production mesh")
     args = ap.parse_args()
@@ -83,15 +96,37 @@ def main() -> int:
         decoder=args.decoder, temperature=args.temperature,
         max_new_tokens=args.new_tokens, gamma=args.gamma,
         compression=args.compression)
-    report = lvlm.serve(
-        synth_requests(lvlm.cfg, args.requests,
-                       new_tokens=args.new_tokens,
-                       shared_prefix=args.shared_prefix),
-        engine_cfg=ec, gen=gen)
-    print(json.dumps({k: v for k, v in report.stats.items()
+    reqs = synth_requests(lvlm.cfg, args.requests,
+                          new_tokens=args.new_tokens,
+                          shared_prefix=args.shared_prefix)
+    if args.open_loop > 0:
+        rng = np.random.RandomState(0)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.open_loop,
+                                             size=len(reqs)))
+        for r, t in zip(reqs, arrivals):
+            r.arrival = float(t)
+        server = lvlm.serve_async(
+            ec, gen=gen, admission=AdmissionConfig(
+                high_watermark=args.high_watermark,
+                low_watermark=args.low_watermark))
+
+        async def drive():
+            async with server:
+                await asyncio.gather(
+                    *(_consume(server.submit(r)) for r in reqs))
+            return server.summary()
+
+        stats = asyncio.run(drive())
+    else:
+        stats = lvlm.serve(reqs, engine_cfg=ec, gen=gen).stats
+    print(json.dumps({k: v for k, v in stats.items()
                       if not isinstance(v, (list, dict))}, indent=1,
                      default=float))
     return 0
+
+
+async def _consume(stream):
+    return [tok async for tok in stream]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""``repro.serving`` -- async streaming serving on top of the grouped engine.
+
+This is the layer where the survey's accelerations meet open-loop traffic:
+instead of the closed ``Engine.run()`` batch, an ``AsyncLVLMServer`` pumps
+the engine's iteration loop in the background and exposes each request as
+an independent async token channel, so millions-of-users-style workloads
+(requests arriving over time, clients consuming tokens as they stream,
+some hanging up mid-generation) are served with per-request SLO telemetry.
+
+Architecture (three small planes over one Engine):
+
+  server.py    ``AsyncLVLMServer`` -- the asyncio pump. One background
+               task repeatedly calls ``Engine.step()`` (each step is a
+               fixed-shape jitted iteration over the whole slot pool,
+               grouped by decode strategy) and fans newly emitted tokens
+               out to per-request ``TokenStream`` queues:
+
+                   server = lvlm.serve_async(EngineConfig(...))
+                   async with server:
+                       async for tok in server.submit(req):
+                           ...                       # streams as decoded
+                       stream.cancel()               # mid-stream abort ->
+                                                     # Engine.abort(rid)
+
+               Cancellation is a full lifecycle event: the engine frees
+               the request's main KV slot, its speculative draft-pool
+               slot, the reserved ``gamma`` lookahead, and any
+               prefix-cache pin -- pool accounting returns to baseline.
+               Everything runs on ONE event loop (the jitted step holds
+               the GIL regardless); the win is request multiplexing and
+               backpressure, not compute parallelism.
+
+  admission.py ``AdmissionController`` -- high/low KV watermarks with
+               hysteresis over ``Engine.kv_committed_tokens()`` (block-
+               rounded prompt + max_new + decode lookahead per live
+               request). A submit that would push the pool past the high
+               watermark AWAITS in a FIFO queue instead of crashing the
+               engine (the paged pool's ``OutOfBlocksError`` failure mode);
+               waiters drain once usage falls below the low watermark.
+
+  metrics.py   ``MetricsRegistry`` -- per-request TTFT / TPOT / JCT /
+               queue-wait records against the engine's deterministic
+               virtual clock, percentile summaries (p50/p95/p99), SLO
+               attainment fractions (per-request ``Request.slo`` targets),
+               abort counts, and the engine's per-decoder-group
+               virtual-clock decode cost.
+
+The sync path (``LVLM.serve``) and this async path share the same Engine,
+schedulers, decoder strategies, and clock -- at temperature 0 the async
+server's streams are bit-identical to the sync facade's outputs
+(locked down by ``tests/test_async_serving.py``).
+"""
+from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.metrics import MetricsRegistry, RequestRecord
+from repro.serving.server import AsyncLVLMServer, TokenStream
+
+__all__ = [
+    "AsyncLVLMServer", "TokenStream",
+    "AdmissionConfig", "AdmissionController",
+    "MetricsRegistry", "RequestRecord",
+]

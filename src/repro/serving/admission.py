@@ -1,0 +1,171 @@
+"""Admission control for the async serving layer: KV watermarks with
+hysteresis and FIFO backpressure.
+
+The engine's dense slot pool (and any narrower ``kv_capacity_tokens``
+budget) is a hard resource: vLLM-style serving systems gate request entry
+on free KV blocks so a burst degrades into queueing delay, never into an
+allocator crash. Here the pressure signal is
+``Engine.kv_committed_tokens()`` -- the block-rounded reservation
+(prompt + max_new + decode lookahead, speculative ``gamma`` included) of
+every live request -- measured against ``Engine.kv_capacity_tokens``:
+
+  * a submit that keeps usage at or below ``high_watermark`` is admitted
+    immediately (``Engine.submit`` runs synchronously, FIFO with any
+    earlier waiters);
+  * otherwise the caller AWAITS in a FIFO queue. Waiters drain only once
+    usage falls back to ``low_watermark`` (hysteresis, so admission does
+    not thrash around the boundary), each re-checked against the high
+    watermark as it is admitted;
+  * ``max_inflight`` optionally bounds the number of live requests inside
+    the engine (waiting + running) regardless of KV headroom.
+
+The controller is event-loop-confined like the rest of the serving layer:
+no locks, admission decisions interleave only at awaits.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+from typing import Deque, Optional, Tuple
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Watermarks are fractions of ``Engine.kv_capacity_tokens``."""
+    high_watermark: float = 0.9
+    low_watermark: float = 0.7
+    max_inflight: Optional[int] = None     # live requests in the engine
+
+    def __post_init__(self):
+        if not 0.0 < self.high_watermark <= 1.0:
+            raise ValueError("high_watermark must be in (0, 1]")
+        if not 0.0 < self.low_watermark <= self.high_watermark:
+            raise ValueError("low_watermark must be in (0, high_watermark]")
+
+
+class AdmissionController:
+    """Gates ``Engine.submit`` behind KV watermarks (see module docstring).
+
+    ``admit`` is the only await point; ``maybe_admit`` is the drain hook
+    the server pump calls after every step and abort.
+    """
+
+    def __init__(self, cfg: AdmissionConfig, engine):
+        self.cfg = cfg
+        self.engine = engine
+        self._waiters: Deque[Tuple[asyncio.Future, object, int]] = \
+            collections.deque()
+        self._draining = False          # blocked until usage <= low mark
+        self.admitted = 0
+        self.deferrals = 0              # submits that had to wait
+
+    # ------------------------------------------------------------ state --
+    def _live(self) -> int:
+        eng = self.engine
+        return (len([r for r in eng.waiting if not r.aborted])
+                + len([r for r in eng.running if not r.aborted]))
+
+    def _fits(self, need: int) -> bool:
+        cfg, eng = self.cfg, self.engine
+        if cfg.max_inflight is not None and self._live() >= cfg.max_inflight:
+            return False
+        return (eng.kv_committed_tokens() + need
+                <= cfg.high_watermark * eng.kv_capacity_tokens)
+
+    def _can_admit(self, need: int) -> bool:
+        eng = self.engine
+        if not (eng.waiting or eng.running):
+            return True      # empty engine: a lone request always progresses
+        return self._fits(need)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._waiters)
+
+    # ------------------------------------------------------------- gate --
+    async def admit(self, req) -> bool:
+        """Submit ``req`` to the engine, awaiting under backpressure.
+
+        Returns True once ``Engine.submit(req)`` has run, False if the
+        waiter was retracted via ``cancel`` (the request never entered
+        the engine). Oversized single requests (which can NEVER fit a
+        slot) still raise ``ValueError`` from the engine -- backpressure
+        is for aggregate pool pressure, not impossible requests.
+        """
+        need = self.engine.kv_request_tokens(req)
+        if not (self.engine.waiting or self.engine.running):
+            self._draining = False      # idle engine: hysteresis is stale
+        if not self._waiters and not self._draining and self._can_admit(need):
+            self.engine.submit(req)
+            self.admitted += 1
+            return True
+        self.deferrals += 1
+        self._draining = True
+        fut = asyncio.get_running_loop().create_future()
+        entry = (fut, req, need)
+        self._waiters.append(entry)
+        try:
+            # maybe_admit() submits before resolving True; cancel()
+            # retracts the entry and resolves False
+            return await fut
+        except asyncio.CancelledError:
+            if fut.done() and not fut.cancelled() and fut.result():
+                # admitted between cancellation and wakeup: undo
+                self.engine.abort(req.rid)
+            else:
+                try:
+                    self._waiters.remove(entry)
+                except ValueError:
+                    pass
+            raise
+
+    def cancel(self, req) -> bool:
+        """Retract a queued waiter (its stream was cancelled before
+        admission). The awaiting ``admit`` returns False; the request
+        never reaches ``Engine.submit``."""
+        for entry in list(self._waiters):
+            fut, r, _need = entry
+            if r is req:
+                self._waiters.remove(entry)
+                if not fut.done():
+                    fut.set_result(False)
+                self._draining = bool(self._waiters)
+                return True
+        return False
+
+    def maybe_admit(self) -> int:
+        """Drain FIFO waiters when usage is back under the low watermark.
+        Called by the pump after every engine step / abort. Returns the
+        number of requests admitted."""
+        if not self._waiters:
+            self._draining = False
+            return 0
+        eng = self.engine
+        if (eng.kv_committed_tokens()
+                > self.cfg.low_watermark * eng.kv_capacity_tokens):
+            return 0
+        n = 0
+        while self._waiters:
+            fut, req, need = self._waiters[0]
+            if fut.cancelled():
+                self._waiters.popleft()
+                continue
+            if not self._can_admit(need):
+                break
+            self._waiters.popleft()
+            eng.submit(req)        # submit BEFORE resolving: accounting is
+            self.admitted += 1     # correct even if the waiter runs late
+            fut.set_result(True)
+            n += 1
+        self._draining = bool(self._waiters)
+        return n
+
+    def cancel_waiters(self) -> None:
+        """Fail every pending waiter (server shutdown without drain)."""
+        while self._waiters:
+            fut, _req, _need = self._waiters.popleft()
+            if not fut.done():
+                fut.set_exception(
+                    RuntimeError("server stopped before admission"))
+        self._draining = False

@@ -1,0 +1,93 @@
+"""SLO telemetry for the serving layer.
+
+Per-request latency records against the engine's deterministic virtual
+clock, aggregated into the summary a serving operator actually pages on:
+TTFT / TPOT percentiles (p50/p95/p99), queue wait, SLO attainment
+fractions, abort counts, and the virtual-clock decode cost per decoder
+group (``Engine.group_costs`` -- the price each strategy charged the
+clock, which is how a mixed speculative/greedy deployment is costed).
+
+``queue_wait`` here is the ADMISSION-gate wait (virtual clock at
+``Engine.submit`` minus clock at the client's submit call); scheduler
+queueing after admission is already inside TTFT.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.serving.request import Request, percentiles
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's lifecycle metrics (virtual-clock seconds)."""
+    rid: int
+    decoder: str
+    prompt_len: int
+    tokens: int                       # generated (partial if aborted)
+    queue_wait: float
+    ttft: Optional[float]
+    tpot: Optional[float]
+    jct: Optional[float]
+    aborted: bool
+    ttft_ok: bool                     # against the request's OWN SLO
+    tpot_ok: bool
+
+
+class MetricsRegistry:
+    """Collects ``RequestRecord``s and summarizes them.
+
+    One registry per server by default; pass a shared instance to
+    ``LVLM.serve_async(metrics=...)`` to aggregate across servers.
+    """
+
+    def __init__(self):
+        self.records: List[RequestRecord] = []
+
+    def observe(self, req: Request, *, queue_wait: float = 0.0,
+                decoder: str = "", aborted: bool = False) -> RequestRecord:
+        rec = RequestRecord(
+            rid=req.rid, decoder=decoder or (req.decoder or "default"),
+            prompt_len=req.prompt_len, tokens=len(req.generated),
+            queue_wait=queue_wait, ttft=req.ttft(), tpot=req.tpot(),
+            jct=req.jct(), aborted=aborted,
+            ttft_ok=(not aborted and req.ttft() is not None
+                     and req.ttft() <= req.slo.ttft_ms * 1e-3),
+            tpot_ok=(not aborted
+                     and (req.tpot() or 0.0) <= req.slo.tpot_ms * 1e-3))
+        self.records.append(rec)
+        return rec
+
+    # ---------------------------------------------------------- summary --
+    def summary(self, engine=None) -> Dict:
+        done = [r for r in self.records if not r.aborted]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        jcts = [r.jct for r in done if r.jct is not None]
+        waits = [r.queue_wait for r in self.records]
+        n = len(done)
+        out: Dict = {
+            "finished": n,
+            "aborted": sum(r.aborted for r in self.records),
+            "tokens": sum(r.tokens for r in done),
+            "ttft_mean": float(np.mean(ttfts)) if ttfts else None,
+            "tpot_mean": float(np.mean(tpots)) if tpots else None,
+            "jct_mean": float(np.mean(jcts)) if jcts else None,
+            "queue_wait_mean": float(np.mean(waits)) if waits else None,
+        }
+        out.update(percentiles(ttfts, "ttft"))
+        out.update(percentiles(tpots, "tpot"))
+        out.update(percentiles(waits, "queue_wait"))
+        out["slo_ttft_attainment"] = (
+            sum(r.ttft_ok for r in done) / n if n else None)
+        out["slo_tpot_attainment"] = (
+            sum(r.tpot_ok for r in done) / n if n else None)
+        out["slo_goodput"] = (
+            sum(r.ttft_ok and r.tpot_ok for r in done) / n if n else None)
+        if engine is not None:
+            out["virtual_time_s"] = engine.clock
+            out["decode_cost_by_group"] = dict(engine.group_costs)
+        return out

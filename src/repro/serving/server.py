@@ -1,0 +1,264 @@
+"""``AsyncLVLMServer``: the asyncio pump over the grouped Engine.
+
+One background task drives ``Engine.step()`` -- each step one fixed-shape
+jitted iteration over the whole slot pool, decode slots grouped per
+request strategy -- and fans newly emitted tokens out to per-request
+``TokenStream`` queues. Clients are plain coroutines:
+
+    server = lvlm.serve_async(EngineConfig(max_batch=8, cache_len=256))
+    async with server:
+        stream = server.submit(Request(rid=0, tokens=prompt,
+                                       decoder="speculative"))
+        async for tok in stream:          # tokens as the engine emits them
+            ...
+            if bored:
+                stream.cancel()           # frees slot + draft row + pins
+                break
+
+Design points:
+
+  * Everything is event-loop-confined: submits, aborts, and the pump
+    interleave only at awaits, so there are no locks and the engine is
+    never re-entered. The jitted step blocks the loop while computing --
+    by design: the accelerator is the serial resource; asyncio buys
+    request multiplexing, streaming delivery, and backpressure.
+  * Admission runs lazily on the stream's FIRST ``__anext__`` (i.e. when
+    the client starts consuming), so ``submit`` itself never blocks;
+    under KV pressure the client awaits inside the admission gate instead
+    of the engine crashing.
+  * Determinism: the engine's virtual clock and temperature-0 decoding
+    make the async path bit-identical to the sync facade
+    (``tests/test_async_serving.py`` locks this down).
+  * ``stop()`` drains by default (finishes in-flight work); pass
+    ``drain=False`` to abort all live streams first.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Dict, List, Optional
+
+from repro.core.serving.request import Request, State
+from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.metrics import MetricsRegistry
+
+_DONE = object()                      # stream sentinel
+
+
+class TokenStream:
+    """One request's async token channel (single consumer).
+
+    ``async for tok in stream`` yields token ids as the engine emits them
+    (speculative rounds surface several per step). ``cancel()`` aborts
+    the request mid-stream; tokens already emitted remain readable, then
+    the iterator ends.
+    """
+
+    def __init__(self, server: "AsyncLVLMServer", request: Request):
+        self._server = server
+        self.request = request
+        self._q: asyncio.Queue = asyncio.Queue()
+        self._pushed = 0              # tokens fanned out so far
+        self._submitted = False
+        self._finished = False
+        self.aborted = False
+        self.submit_clock: Optional[float] = None
+        self.admit_clock: Optional[float] = None
+
+    @property
+    def queue_wait(self) -> float:
+        """Virtual-clock admission-gate wait (0 until admitted)."""
+        if self.submit_clock is None or self.admit_clock is None:
+            return 0.0
+        return self.admit_clock - self.submit_clock
+
+    @property
+    def tokens(self) -> List[int]:
+        """Tokens generated so far (complete once the stream ends)."""
+        return list(self.request.generated)
+
+    def cancel(self) -> bool:
+        """Abort mid-stream; see ``AsyncLVLMServer.abort``."""
+        return self._server.abort(self.request.rid)
+
+    def __aiter__(self) -> "TokenStream":
+        return self
+
+    async def __anext__(self) -> int:
+        if not self._submitted and not self._finished:
+            await self._server._admit(self)
+        if self._finished and self._q.empty():
+            raise StopAsyncIteration
+        item = await self._q.get()
+        if item is _DONE:
+            raise StopAsyncIteration
+        if isinstance(item, BaseException):
+            raise item                  # pump failure propagates, no hang
+        return item
+
+
+class AsyncLVLMServer:
+    """Async streaming server over one Engine (see module docstring).
+
+    Build via ``LVLM.serve_async(engine_cfg, gen=..., draft=...,
+    admission=...)``; the engine wiring (decoder registry, compression,
+    temperature plumbing) is exactly ``LVLM.serve``'s.
+    """
+
+    def __init__(self, lvlm, *, engine_cfg=None, gen=None, draft=None,
+                 admission: Optional[AdmissionConfig] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.engine = lvlm._serve_engine(engine_cfg, gen, draft)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.admission = AdmissionController(
+            admission if admission is not None else AdmissionConfig(),
+            self.engine)
+        self._streams: Dict[int, TokenStream] = {}
+        self._wake: Optional[asyncio.Event] = None
+        self._pump_task: Optional[asyncio.Task] = None
+        self._stopping = False
+        self._pump_error: Optional[BaseException] = None
+
+    # -------------------------------------------------------- lifecycle --
+    async def start(self) -> "AsyncLVLMServer":
+        if self._pump_task is None:
+            self._stopping = False
+            self._wake = asyncio.Event()
+            self._pump_task = asyncio.get_running_loop().create_task(
+                self._pump())
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop the pump. ``drain=True`` finishes in-flight requests
+        first; ``drain=False`` aborts every live stream immediately."""
+        if self._pump_task is None:
+            return
+        if not drain:
+            self.admission.cancel_waiters()
+            for rid in list(self._streams):
+                self.abort(rid)
+        self._stopping = True
+        self._wake.set()
+        try:
+            await self._pump_task      # re-raises a pump failure here
+        finally:
+            self._pump_task = None
+
+    async def __aenter__(self) -> "AsyncLVLMServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=not any(exc))
+
+    # ----------------------------------------------------------- intake --
+    def submit(self, request: Request) -> TokenStream:
+        """Register a request and return its token stream. Admission (and
+        hence any backpressure await) happens on the stream's first
+        ``__anext__`` -- ``submit`` itself never blocks. The rid is
+        reserved immediately, so a duplicate submit fails fast and a
+        ``cancel()`` BEFORE the first ``__anext__`` already aborts."""
+        if request.rid in self._streams:
+            raise ValueError(f"request id {request.rid} already streaming")
+        stream = TokenStream(self, request)
+        self._streams[request.rid] = stream
+        return stream
+
+    async def _admit(self, stream: TokenStream) -> None:
+        if self._pump_error is not None:
+            raise RuntimeError("server pump failed") from self._pump_error
+        if self._pump_task is None:
+            await self.start()          # lazy start outside `async with`
+        stream._submitted = True
+        stream.submit_clock = self.engine.clock
+        try:
+            admitted = await self.admission.admit(stream.request)
+        except asyncio.CancelledError:
+            self._streams.pop(stream.request.rid, None)
+            stream.aborted = True
+            stream._finished = True
+            raise
+        if not admitted:
+            return                      # cancelled at the admission gate
+        stream.admit_clock = self.engine.clock
+        self._wake.set()
+
+    def abort(self, rid: int) -> bool:
+        """Cancel a live request: ``Engine.abort`` frees its KV slot, any
+        speculative draft-pool slot, the reserved lookahead, and its
+        prefix pin; already-emitted tokens stay readable on the stream.
+        Works at every lifecycle stage: not-yet-iterated, waiting at the
+        admission gate, or mid-decode."""
+        stream = self._streams.pop(rid, None)
+        ok = self.engine.abort(rid)
+        if stream is not None:
+            if not ok and stream._submitted:
+                # parked at the admission gate: retract the waiter so the
+                # cancelled request never enters the engine
+                self.admission.cancel(stream.request)
+            stream.aborted = True
+            stream.request.aborted = True
+            self._fan_out(stream)
+            self._finish_stream(stream, aborted=True)
+        self.admission.maybe_admit()     # freed capacity -> drain waiters
+        return ok or stream is not None
+
+    # ------------------------------------------------------------- pump --
+    async def _pump(self) -> None:
+        eng = self.engine
+        try:
+            while True:
+                if not (eng.waiting or eng.running):
+                    if self._stopping:
+                        return
+                    self._wake.clear()
+                    await self._wake.wait()
+                    continue
+                eng.step()               # one jitted grouped iteration
+                self._drain()
+                self.admission.maybe_admit()
+                await asyncio.sleep(0)   # let clients consume this step
+        except BaseException as exc:     # fail streams: never hang clients
+            self._fail(exc)
+            raise
+
+    def _fail(self, exc: BaseException) -> None:
+        """Pump died: every live stream and admission waiter must learn,
+        or their consumers would await a sentinel that never comes."""
+        self._pump_error = exc
+        self.admission.cancel_waiters()
+        for rid, stream in list(self._streams.items()):
+            del self._streams[rid]
+            self._fan_out(stream)
+            stream._finished = True
+            stream._q.put_nowait(exc)
+
+    def _fan_out(self, stream: TokenStream) -> None:
+        gen = stream.request.generated
+        while stream._pushed < len(gen):
+            stream._q.put_nowait(gen[stream._pushed])
+            stream._pushed += 1
+
+    def _finish_stream(self, stream: TokenStream, aborted: bool) -> None:
+        stream._finished = True
+        stream._q.put_nowait(_DONE)
+        req = stream.request
+        name = req.decoder or self.engine._default_name
+        self.metrics.observe(req, queue_wait=stream.queue_wait,
+                             decoder=name, aborted=aborted)
+
+    def _drain(self) -> None:
+        for rid, stream in list(self._streams.items()):
+            self._fan_out(stream)
+            if stream.request.state is State.DONE:
+                del self._streams[rid]
+                self._finish_stream(stream, aborted=False)
+
+    # ---------------------------------------------------------- reports --
+    def summary(self) -> Dict:
+        """Metrics summary + admission counters (see MetricsRegistry)."""
+        out = self.metrics.summary(self.engine)
+        out["admitted"] = self.admission.admitted
+        out["deferred"] = self.admission.deferrals
+        out.update({f"decoder_stats/{k}": v
+                    for k, v in self.engine.decoder_stats().items()
+                    if not isinstance(v, (list, dict))})
+        return out

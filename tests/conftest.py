@@ -14,8 +14,10 @@ jax.config.update("jax_enable_x64", False)
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers",
-                            "slow: long-running subprocess tests")
+    config.addinivalue_line(
+        "markers",
+        "slow: long jit-heavy equivalence / subprocess tests (the CI "
+        'smoke job deselects them with -m "not slow")')
 
 
 @pytest.fixture(scope="session")

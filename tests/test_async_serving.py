@@ -1,0 +1,337 @@
+"""Async streaming server (PR tentpole): the `repro.serving` subsystem.
+
+Contracts locked down here:
+
+  * the async server's streams are BIT-IDENTICAL to the sync facade at
+    temperature 0, per decoder strategy and for mixed
+    speculative/greedy/early-exit/sampling batches (the pump + channel
+    plumbing must never change a token),
+  * mid-stream ``cancel()`` frees the main KV slot, the speculative
+    draft-pool slot, and the reserved gamma lookahead -- pool accounting
+    returns to baseline while the other request keeps decoding,
+  * admission control DEFERS (awaits) rather than raising when the KV
+    pool is saturated: everything completes, the live-request count
+    respects the watermark, and deferrals are counted,
+  * prefix pins: an entry a live request hit cannot be LRU-evicted until
+    that request retires/aborts,
+  * SLO telemetry: percentiles, queue wait, per-group decode cost,
+    attainment fractions.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.api import (AdmissionConfig, EngineConfig, GenerationConfig,
+                       LVLM, Request)
+from repro.core.serving import Engine
+from repro.serving import MetricsRegistry
+
+MAX_NEW = 6
+GEN = GenerationConfig(decoder="greedy", temperature=0.0,
+                       max_new_tokens=MAX_NEW, gamma=3)
+
+
+@pytest.fixture(scope="module")
+def lvlm():
+    return LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
+
+
+def _prompts(n, seed=0, lo=8, hi=16):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, 512, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def _reqs(prompts, new=MAX_NEW, decoders=None):
+    reqs = [Request(rid=i, tokens=list(p), max_new_tokens=new)
+            for i, p in enumerate(prompts)]
+    if decoders:
+        for r, d in zip(reqs, decoders):
+            r.decoder = d
+    return reqs
+
+
+def _ec(**kw):
+    base = dict(max_batch=4, cache_len=96, temperature=0.0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+async def _consume(stream, cancel_after=None):
+    out = []
+    async for tok in stream:
+        out.append(tok)
+        if cancel_after is not None and len(out) >= cancel_after:
+            stream.cancel()
+            break
+    return out
+
+
+def _serve_all(lvlm, reqs, ec, gen=GEN, admission=None):
+    server = lvlm.serve_async(ec, gen=gen, admission=admission)
+
+    async def drive():
+        async with server:
+            outs = await asyncio.gather(
+                *(_consume(server.submit(r)) for r in reqs))
+        return outs
+
+    outs = asyncio.run(drive())
+    return server, {r.rid: list(o) for r, o in zip(reqs, outs)}
+
+
+# ------------------------------------------------- golden equivalence --
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("decoders", [
+    None,                                              # default greedy
+    ["speculative", "speculative", "speculative"],     # batched spec slots
+    ["speculative", "greedy", "early_exit", "sampling"],   # mixed 4-way
+], ids=["greedy", "speculative", "mixed"])
+def test_async_stream_matches_sync_facade(lvlm, decoders):
+    """Every strategy (and a mixed batch) streams the exact tokens the
+    sync facade produces at temperature 0."""
+    n = len(decoders) if decoders else 3
+    prompts = _prompts(n, seed=3)
+    sync = lvlm.serve(_reqs(prompts, decoders=decoders), _ec(), gen=GEN)
+    ref = {r.rid: list(r.generated) for r in sync.requests}
+    _server, got = _serve_all(lvlm, _reqs(prompts, decoders=decoders), _ec())
+    assert got == ref
+
+
+def test_stream_is_incremental_and_summary_complete(lvlm):
+    """Tokens arrive over multiple pump iterations (not one burst at the
+    end) and the summary carries the full SLO telemetry."""
+    req = Request(rid=0, tokens=_prompts(1, seed=4)[0], max_new_tokens=8)
+    server = lvlm.serve_async(_ec(), gen=GEN)
+
+    async def drive():
+        steps_at_token = []
+        async with server:
+            async for _ in server.submit(req):
+                steps_at_token.append(server.engine.iters)
+        return steps_at_token
+
+    steps = asyncio.run(drive())
+    assert len(steps) == 8
+    assert steps[0] < steps[-1]            # streamed across iterations
+    s = server.summary()
+    for key in ("ttft_p50", "ttft_p95", "ttft_p99", "tpot_p50",
+                "queue_wait_mean", "slo_ttft_attainment", "slo_goodput",
+                "decode_cost_by_group", "virtual_time_s"):
+        assert key in s, key
+    assert s["finished"] == 1 and s["aborted"] == 0
+    assert s["decode_cost_by_group"].get("greedy", 0) > 0
+
+
+# ------------------------------------------------------- cancellation --
+
+
+def test_abort_frees_slot_draft_pool_and_lookahead(lvlm):
+    """Mid-stream cancel: the main slot, the speculative draft-pool slot,
+    and the gamma lookahead reservation are all freed while the OTHER
+    request keeps decoding; accounting returns to baseline."""
+    p0, p1 = _prompts(2, seed=5, lo=10, hi=12)
+    r0 = Request(rid=0, tokens=p0, max_new_tokens=24, decoder="speculative")
+    r1 = Request(rid=1, tokens=p1, max_new_tokens=24, decoder="speculative")
+    server = lvlm.serve_async(_ec(), gen=GEN)
+    eng = server.engine
+
+    async def drive():
+        async with server:
+            s1 = server.submit(r1)
+            t1 = asyncio.create_task(_consume(s1))
+            s0 = server.submit(r0)
+            out0 = await _consume(s0, cancel_after=2)
+            # r1 is still mid-decode here: pool accounting must already be
+            # back to exactly r1's reservation (incl. its gamma lookahead)
+            slot0 = r0._slot
+            mid = dict(
+                slot_freed=eng.slot_req[slot0] is None,
+                draft_freed=slot0 not in
+                eng._decoders["speculative"].bound_slots(),
+                committed=eng.kv_committed_tokens(),
+                r1_need=eng.kv_request_tokens(r1),
+                r1_live=len(r1.generated) < 24,
+                stream_aborted=s0.aborted)
+            out1 = await t1
+            return out0, out1, mid
+
+    out0, out1, mid = asyncio.run(drive())
+    assert 2 <= len(out0) < 24 and r0.aborted
+    assert len(out1) == 24 and not r1.aborted
+    assert mid["slot_freed"] and mid["draft_freed"] and mid["r1_live"]
+    assert mid["stream_aborted"]
+    assert mid["committed"] == mid["r1_need"]        # baseline + r1 only
+    # gamma lookahead really is part of the reservation
+    assert mid["r1_need"] >= len(p1) + 24 + GEN.gamma
+    # after the run everything is back to zero
+    assert eng.kv_committed_tokens() == 0
+    assert all(r is None for r in eng.slot_req)
+    assert eng._decoders["speculative"].bound_slots() == set()
+    s = server.summary()
+    assert s["aborted"] == 1 and s["finished"] == 1
+
+
+def test_abort_waiting_request_and_unknown_rid(lvlm):
+    """Abort of a not-yet-prefilled (waiting) request and of an unknown
+    rid are both clean; Engine.aborted records the cancelled one."""
+    eng = Engine(lvlm.model, lvlm.params,
+                 EngineConfig(max_batch=1, cache_len=96))
+    r0 = Request(rid=0, tokens=list(range(1, 10)), max_new_tokens=4)
+    eng.submit(r0)
+    assert eng.abort(0) is True
+    assert eng.abort(0) is False                 # already gone
+    assert eng.abort(99) is False
+    assert r0.aborted and eng.waiting == [] and eng.aborted == [r0]
+    assert eng.kv_committed_tokens() == 0
+
+
+def test_cancel_before_first_anext_and_duplicate_rid(lvlm):
+    """Regressions: cancel() BEFORE the stream is ever iterated must
+    still abort (the request never enters the engine), and a duplicate
+    rid submit fails fast instead of orphaning the first stream."""
+    server = lvlm.serve_async(_ec(), gen=GEN)
+
+    async def drive():
+        async with server:
+            live = server.submit(Request(rid=1, tokens=[5, 6, 7],
+                                         max_new_tokens=4))
+            dead = server.submit(Request(rid=0, tokens=[1, 2, 3],
+                                         max_new_tokens=4))
+            with pytest.raises(ValueError):
+                server.submit(Request(rid=0, tokens=[9], max_new_tokens=1))
+            assert dead.cancel() is True
+            out_dead = await _consume(dead)      # ends without admitting
+            out_live = await _consume(live)
+            return out_dead, out_live
+
+    out_dead, out_live = asyncio.run(drive())
+    assert out_dead == [] and out_live and len(out_live) == 4
+    assert server.engine.kv_committed_tokens() == 0
+    assert server.summary()["aborted"] == 1
+    assert not any(r.rid == 0 for r in server.engine.finished)
+
+
+def test_pump_failure_propagates_instead_of_hanging(lvlm):
+    """Regression: an exception inside the pump (engine.step) must fail
+    every live stream and re-raise at stop() -- never leave consumers
+    awaiting a sentinel forever."""
+    server = lvlm.serve_async(_ec(), gen=GEN)
+    boom = RuntimeError("injected step failure")
+
+    def bad_step():
+        raise boom
+
+    async def drive():
+        async with server:
+            server.engine.step = bad_step
+            stream = server.submit(Request(rid=0, tokens=[1, 2, 3],
+                                           max_new_tokens=4))
+            with pytest.raises(RuntimeError, match="injected"):
+                await asyncio.wait_for(_consume(stream), timeout=10)
+
+    with pytest.raises(RuntimeError, match="injected"):
+        asyncio.run(drive())             # stop() re-raises the pump error
+    assert server._pump_error is boom
+
+
+# ---------------------------------------------------------- admission --
+
+
+def test_admission_defers_instead_of_raising_when_saturated(lvlm):
+    """KV saturation => submits WAIT at the admission gate (no
+    OutOfBlocksError-style crash, no engine overcommit): live requests
+    never exceed what the high watermark allows, yet every request
+    completes."""
+    prompts = _prompts(5, seed=7, lo=12, hi=15)
+    reqs = _reqs(prompts)
+    # capacity 4*64=256; each request needs 32 (block-rounded prompt+new);
+    # high=0.25 -> 64 tokens -> at most TWO live requests at a time
+    adm = AdmissionConfig(high_watermark=0.25, low_watermark=0.15)
+    server = lvlm.serve_async(_ec(cache_len=64), gen=GEN, admission=adm)
+    eng = server.engine
+    peak = 0
+
+    async def consume(r):
+        nonlocal peak
+        out = []
+        async for tok in server.submit(r):
+            peak = max(peak, len(eng.waiting) + len(eng.running))
+            out.append(tok)
+        return out
+
+    async def drive():
+        async with server:
+            return await asyncio.gather(*(consume(r) for r in reqs))
+
+    outs = asyncio.run(drive())
+    assert all(len(o) == MAX_NEW for o in outs)
+    assert peak <= 2
+    assert server.admission.deferrals >= 3
+    assert server.admission.queue_depth == 0
+    assert server.summary()["queue_wait_p99"] > 0
+
+
+def test_admission_single_oversized_request_still_progresses(lvlm):
+    """An idle engine always admits (a lone request must progress even if
+    it alone exceeds the high watermark fraction)."""
+    reqs = _reqs(_prompts(1, seed=8, lo=30, hi=31), new=8)
+    adm = AdmissionConfig(high_watermark=0.05, low_watermark=0.05)
+    _server, got = _serve_all(lvlm, reqs, _ec(), admission=adm)
+    assert len(got[0]) == 8
+
+
+# -------------------------------------------------------- prefix pins --
+
+
+def test_prefix_pin_blocks_eviction_until_release(lvlm):
+    """An entry a live request hit is pinned: LRU eviction must skip it
+    until the request retires (then eviction works again)."""
+    eng = Engine(lvlm.model, lvlm.params,
+                 EngineConfig(max_batch=1, cache_len=64, prefix_cache=True,
+                              prefix_block=4, prefix_cap=1))
+    a = list(range(1, 9))
+    eng._prefix_insert(a, 0, 8)
+    req = Request(rid=0, tokens=a + [99], max_new_tokens=2)
+    eng.submit(req)
+    eng.step()                                    # prefill: hits + pins A
+    key = tuple(a)
+    assert eng._prefix_pins.get(key, 0) == 1
+    eng._prefix_insert(list(range(101, 109)), 0, 8)   # over cap: A pinned
+    assert key in eng._prefix
+    while eng.step():
+        pass                                      # req retires -> unpin
+    assert eng._prefix_pins == {}
+    eng._prefix_insert(list(range(201, 209)), 0, 8)   # now A can go
+    assert key not in eng._prefix
+
+
+# ------------------------------------------------------------ metrics --
+
+
+def test_metrics_registry_shared_and_slo_flags(lvlm):
+    """A shared registry aggregates across servers; SLO flags follow the
+    per-request targets."""
+    reg = MetricsRegistry()
+    prompts = _prompts(2, seed=9)
+    for _k in range(2):
+        reqs = _reqs(prompts)
+        reqs[0].slo.ttft_ms = 1e-9                # impossible target
+        server = lvlm.serve_async(_ec(), gen=GEN, metrics=reg)
+
+        async def drive(server=server, reqs=reqs):
+            async with server:
+                await asyncio.gather(
+                    *(_consume(server.submit(r)) for r in reqs))
+
+        asyncio.run(drive())
+    assert len(reg.records) == 4
+    s = reg.summary()
+    assert s["finished"] == 4
+    assert s["slo_ttft_attainment"] == 0.5        # rid 0 misses both runs
+    by_rid = [r for r in reg.records if r.rid == 0]
+    assert all(not r.ttft_ok for r in by_rid)
+    assert all(r.decoder == "greedy" for r in reg.records)

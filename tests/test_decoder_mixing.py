@@ -44,6 +44,7 @@ def prompts():
 # ------------------------------------------------- golden equivalence --
 
 
+@pytest.mark.slow
 def test_batched_spec_matches_standalone_and_greedy(lvlm, prompts):
     """>= 2 speculative slots share each jitted draft/verify round, and
     every request's tokens are bit-identical to BOTH the standalone driver
@@ -62,6 +63,7 @@ def test_batched_spec_matches_standalone_and_greedy(lvlm, prompts):
         assert o.tokens == toks
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("preset", ["none", "fastv-0.5", "divprune-0.5",
                                     "tome-0.5"])
 def test_batched_spec_matches_greedy_per_preset(vlm, preset):
@@ -83,6 +85,7 @@ def test_batched_spec_matches_greedy_per_preset(vlm, preset):
         assert s.tokens == r.tokens, preset
 
 
+@pytest.mark.slow
 def test_batched_spec_matches_standalone_driver_compressed_vlm(vlm):
     """Engine-batched speculative under a pruning preset == the standalone
     driver fed the same (pre-compressed) visual tokens."""
@@ -115,6 +118,7 @@ def test_kv_presets_reject_speculative(lvlm, prompts):
 # ------------------------------------------------- per-request mixing --
 
 
+@pytest.mark.slow
 def test_mixed_strategies_single_engine(lvlm, prompts):
     """ONE engine serves greedy + sampling + speculative + early-exit
     requests concurrently; each request's tokens equal its dedicated
