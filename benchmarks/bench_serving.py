@@ -6,9 +6,11 @@ Real engine, real smoke model, virtual-clock metrics:
   * prefix caching on shared-system-prompt traffic,
   * per-request decoder mixing: greedy + sampling + speculative +
     early-exit requests in ONE engine run (batched speculative slots),
-  * open-loop Poisson traffic through the ASYNC streaming server
-    (admission watermarks, mixed decoders, TTFT/TPOT percentiles + SLO
-    attainment, emitted as a ``# open_loop`` JSON record),
+  * open-loop Poisson traffic through the ASYNC serving stack at EVERY
+    replica count (cluster Router, least-KV routing, SLO-slack deferred
+    queues): one ``# open_loop`` JSON record per (rate, replica count)
+    with fleet-wide percentiles + SLO attainment -- the multi-replica
+    throughput/latency trajectory (``--replicas 1,2,4`` to extend),
   * disaggregated vs colocated pools under KV-transfer cost (analytic sim).
 
 Latency rows report percentiles (p50/p95/p99), not just means.
@@ -92,50 +94,67 @@ def mixed_decoders(lvlm: LVLM) -> None:
              f"tput={out['throughput_tok_per_s']:.0f}")
 
 
-def open_loop(lvlm: LVLM) -> None:
-    """Open-loop Poisson traffic through the ASYNC streaming server:
-    requests arrive over (virtual) time at a fixed rate, mixed decoder
-    strategies, KV-watermark admission control, streaming clients. The
-    metric that matters for a serving system: tail TTFT/TPOT and SLO
-    attainment under load, not the closed-batch makespan."""
-    rng = np.random.RandomState(9)
+def open_loop(lvlm: LVLM, replica_counts=(1, 2)) -> None:
+    """Open-loop Poisson traffic through the ASYNC serving stack at every
+    replica count: requests arrive over (virtual) time at a fixed rate,
+    mixed decoder strategies, KV-watermark admission with SLO-slack
+    deferred queues, routed over N engine replicas by least-committed-KV.
+    One ``# open_loop`` JSON record per (rate, replica count) -- the
+    fleet-wide throughput/latency trajectory BENCH_*.json tracks: tail
+    TTFT/TPOT and SLO attainment under load, not closed-batch makespan."""
     strategies = ("speculative", "greedy", "sampling", "greedy")
     for label, rate in (("r500", 500.0), ("r2000", 2000.0)):
-        reqs = _reqs(lvlm.cfg, 16, seed=10, lo=8, hi=24, new=8)
-        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
-        for i, r in enumerate(reqs):
-            r.arrival = float(arrivals[i])
-            r.decoder = strategies[i % len(strategies)]
-        server = lvlm.serve_async(
-            EngineConfig(max_batch=4, cache_len=128, temperature=0.0),
-            gen=GenerationConfig(decoder="greedy", temperature=0.0,
-                                 max_new_tokens=8, gamma=3),
-            admission=AdmissionConfig(high_watermark=0.9,
-                                      low_watermark=0.7))
+        for n_rep in replica_counts:
+            rng = np.random.RandomState(9)
+            reqs = _reqs(lvlm.cfg, 16, seed=10, lo=8, hi=24, new=8)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate,
+                                                 size=len(reqs)))
+            for i, r in enumerate(reqs):
+                r.arrival = float(arrivals[i])
+                r.decoder = strategies[i % len(strategies)]
+            router = lvlm.serve_cluster(
+                n_rep,
+                EngineConfig(max_batch=4, cache_len=128, temperature=0.0),
+                gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                     max_new_tokens=8, gamma=3),
+                routing="least_kv",
+                admission=AdmissionConfig(high_watermark=0.9,
+                                          low_watermark=0.7,
+                                          order="slack"))
 
-        async def drive(server=server, reqs=reqs):
-            async def consume(r):
-                return [t async for t in server.submit(r)]
-            async with server:
-                await asyncio.gather(*(consume(r) for r in reqs))
-            return server.summary()
+            async def drive(router=router, reqs=reqs):
+                async def consume(r):
+                    return [t async for t in router.submit(r)]
+                async with router:
+                    await asyncio.gather(*(consume(r) for r in reqs))
+                return router.summary()
 
-        out = asyncio.run(drive())
-        emit(f"serve/open_loop/{label}", out["virtual_time_s"] * 1e6,
-             f"{_pcts(out, 'ttft')};{_pcts(out, 'tpot')};"
-             f"slo_goodput={out['slo_goodput']:.2f};"
-             f"queue_wait_p95={out.get('queue_wait_p95') or 0:.4f};"
-             f"deferred={out['deferred']}")
-        record = {"scenario": f"open_loop/{label}", "rate_rps": rate,
-                  "finished": out["finished"], "aborted": out["aborted"],
-                  "slo_ttft_attainment": out["slo_ttft_attainment"],
-                  "slo_tpot_attainment": out["slo_tpot_attainment"],
-                  "slo_goodput": out["slo_goodput"],
-                  "deferred": out["deferred"],
-                  "virtual_time_s": out["virtual_time_s"]}
-        record.update({k: out[k] for k in out
-                       if k.startswith(("ttft_p", "tpot_p", "queue_wait_"))})
-        print("# open_loop " + json.dumps(record, default=float), flush=True)
+            out = asyncio.run(drive())
+            emit(f"serve/open_loop/{label}/replicas{n_rep}",
+                 out["virtual_time_s"] * 1e6,
+                 f"{_pcts(out, 'ttft')};{_pcts(out, 'tpot')};"
+                 f"slo_goodput={out['slo_goodput']:.2f};"
+                 f"tput={out.get('fleet_throughput_tok_per_s', 0):.0f};"
+                 f"queue_wait_p95={out.get('queue_wait_p95') or 0:.4f};"
+                 f"deferred={out['deferred']}")
+            record = {"scenario": f"open_loop/{label}/replicas{n_rep}",
+                      "rate_rps": rate, "replicas": n_rep,
+                      "routing": out["routing_policy"],
+                      "finished": out["finished"],
+                      "aborted": out["aborted"],
+                      "slo_ttft_attainment": out["slo_ttft_attainment"],
+                      "slo_tpot_attainment": out["slo_tpot_attainment"],
+                      "slo_goodput": out["slo_goodput"],
+                      "deferred": out["deferred"],
+                      "failovers": out["failovers"],
+                      "dispatched_by_replica": out["dispatched_by_replica"],
+                      "fleet_throughput_tok_per_s":
+                          out.get("fleet_throughput_tok_per_s"),
+                      "virtual_time_s": out["virtual_time_s"]}
+            record.update({k: out[k] for k in out if k.startswith(
+                ("ttft_p", "tpot_p", "queue_wait_"))})
+            print("# open_loop " + json.dumps(record, default=float),
+                  flush=True)
 
 
 def disaggregation() -> None:
@@ -162,14 +181,32 @@ def disaggregation() -> None:
              f"goodput={g:.2f}")
 
 
-def run() -> None:
+def run(replica_counts=(1, 2)) -> None:
     lvlm = LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
     schedulers(lvlm)
     prefix_cache(lvlm)
     mixed_decoders(lvlm)
-    open_loop(lvlm)
+    open_loop(lvlm, replica_counts=replica_counts)
     disaggregation()
 
 
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--replicas", default="1,2",
+                    help="comma-separated replica counts for the "
+                         "open-loop trajectory (e.g. '2' or '1,2,4')")
+    ap.add_argument("--only-open-loop", action="store_true",
+                    help="skip the closed-loop scenarios")
+    args = ap.parse_args()
+    counts = tuple(int(x) for x in str(args.replicas).split(",") if x)
+    if args.only_open_loop:
+        open_loop(LVLM.from_pretrained("phi4-mini-3.8b", smoke=True),
+                  replica_counts=counts)
+    else:
+        run(replica_counts=counts)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -37,6 +37,10 @@ from repro.core.serving import EngineConfig, Request
 from repro.serving import (AdmissionConfig, AsyncLVLMServer,
                            MetricsRegistry, TokenStream)
 
+# cluster layer: multi-engine routing over N async server replicas
+# (`LVLM.serve_cluster`); same one-import convenience
+from repro.cluster import ClusterMetrics, ROUTING_POLICIES, Router
+
 __all__ = [
     "LVLM", "GenerationConfig", "GenerationResult", "ServeResult",
     "DECODERS", "DECODER_NAMES", "make_decoder",
@@ -45,4 +49,5 @@ __all__ = [
     "COMPRESSION_PRESETS", "resolve_compression", "CompressionConfig",
     "EngineConfig", "Request",
     "AsyncLVLMServer", "TokenStream", "AdmissionConfig", "MetricsRegistry",
+    "Router", "ClusterMetrics", "ROUTING_POLICIES",
 ]

@@ -285,7 +285,10 @@ class LVLM:
     def serve_async(self, engine_cfg: Optional[EngineConfig] = None,
                     gen: Optional[GenerationConfig] = None, *,
                     draft: Optional["LVLM"] = None,
-                    admission=None, metrics=None) -> AsyncLVLMServer:
+                    admission=None, metrics=None,
+                    pacing: str = "virtual", pacing_scale: float = 1.0,
+                    disconnect_timeout_s: Optional[float] = None
+                    ) -> AsyncLVLMServer:
         """Async streaming server over the same engine wiring as ``serve``.
 
         Returns a ``repro.serving.AsyncLVLMServer``: a background pump over
@@ -300,10 +303,71 @@ class LVLM:
                     ...
 
         ``admission`` is a ``repro.serving.AdmissionConfig`` (high/low KV
-        watermarks, optional max inflight); ``metrics`` an optional shared
-        ``MetricsRegistry``. At temperature 0 the streams are
-        bit-identical to ``serve``'s outputs.
+        watermarks, optional max inflight, deferred-queue ``order``:
+        "fifo" or SLO-slack "slack"); ``metrics`` an optional shared
+        ``MetricsRegistry``. ``pacing="wall"`` sleeps each step's virtual
+        duration (times ``pacing_scale``) in real time -- the default
+        "virtual" runs steps back-to-back and stays deterministic.
+        ``disconnect_timeout_s`` aborts a stream whose consumer stopped
+        reading for that many wall seconds. At temperature 0 the streams
+        are bit-identical to ``serve``'s outputs.
         """
         return AsyncLVLMServer(self, engine_cfg=engine_cfg, gen=gen,
                                draft=draft, admission=admission,
-                               metrics=metrics)
+                               metrics=metrics, pacing=pacing,
+                               pacing_scale=pacing_scale,
+                               disconnect_timeout_s=disconnect_timeout_s)
+
+    def serve_cluster(self, replicas=2,
+                      engine_cfg: Optional[EngineConfig] = None,
+                      gen: Optional[GenerationConfig] = None, *,
+                      routing="round_robin", draft: Optional["LVLM"] = None,
+                      admission=None, pacing: str = "virtual",
+                      pacing_scale: float = 1.0,
+                      disconnect_timeout_s: Optional[float] = None
+                      ) -> "Router":
+        """Multi-engine router: N async server replicas behind ONE submit
+        surface (``repro.cluster.Router``), with pluggable routing.
+
+        ``replicas`` is an int (homogeneous fleet sharing ``engine_cfg`` /
+        ``gen`` / ``draft`` / ``admission``) or a sequence of per-replica
+        override dicts with any of those keys -- a heterogeneous fleet,
+        e.g. one speculative-heavy replica and one early-exit replica:
+
+            router = lvlm.serve_cluster(
+                [{"gen": GenerationConfig(decoder="speculative", gamma=4)},
+                 {"gen": GenerationConfig(decoder="early_exit")}],
+                routing="least_kv")
+            async with router:
+                async for tok in router.submit(req):
+                    ...
+
+        ``routing`` is a ``repro.cluster.ROUTING_POLICIES`` name
+        (round_robin | least_kv | prefix_affinity) or a policy instance.
+        Pacing/disconnect knobs apply to every replica (see
+        ``serve_async``). With one replica the router streams are
+        bit-identical to the bare server's.
+        """
+        from repro.cluster import Router
+
+        if isinstance(replicas, int):
+            if replicas < 1:
+                raise ValueError("serve_cluster needs at least one replica")
+            specs: List[Dict] = [{} for _ in range(replicas)]
+        else:
+            specs = [dict(s) for s in replicas]
+            if not specs:
+                raise ValueError("serve_cluster needs at least one replica")
+        servers = []
+        for spec in specs:
+            unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission"}
+            if unknown:
+                raise ValueError(f"unknown replica spec keys: {unknown}")
+            servers.append(self.serve_async(
+                spec.get("engine_cfg", engine_cfg),
+                spec.get("gen", gen),
+                draft=spec.get("draft", draft),
+                admission=spec.get("admission", admission),
+                pacing=pacing, pacing_scale=pacing_scale,
+                disconnect_timeout_s=disconnect_timeout_s))
+        return Router(servers, routing=routing)

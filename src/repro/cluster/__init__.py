@@ -1,0 +1,53 @@
+"""``repro.cluster`` -- multi-engine routing: one submit surface, N engines.
+
+One KV pool and one FIFO cannot serve heavy open-loop traffic; at fleet
+scale, scheduling and cache-affinity decisions dominate tail latency.
+This layer fronts N ``AsyncLVLMServer`` replicas (possibly heterogeneous
+-- different compression presets, decoder defaults, draft models) behind
+the exact serving contract clients already use:
+
+    router = lvlm.serve_cluster(replicas=2, routing="prefix_affinity")
+    async with router:
+        async for tok in router.submit(req):
+            ...
+    print(router.summary())           # fleet-wide percentiles + routing
+
+Three planes over the serving layer:
+
+  router.py    ``Router`` / ``Replica`` / ``RouterStream`` -- dispatch,
+               replica health (ok / draining / dead), drain lifecycle,
+               and consumer-transparent FAILOVER: a dead pump's
+               queued-but-unstarted requests re-dispatch to a sibling
+               (started streams re-raise; emitted tokens are never
+               re-run).
+  policies.py  ``ROUTING_POLICIES`` -- round_robin, least_kv (KV
+               reservations of every assigned request, the PR 3
+               ``kv_request_tokens`` accounting), and prefix_affinity
+               (longest cached block-aligned prefix wins; cold prefixes
+               consistent-hash so affinity builds).
+  metrics.py   ``ClusterMetrics`` -- merges per-replica registries into
+               fleet-wide TTFT/TPOT percentiles, SLO attainment, fleet
+               throughput vs the slowest replica's clock, per-replica
+               dispatch/health, aggregate prefix hits.
+
+SLO-aware dispatch composes from the serving layer: give each replica
+``AdmissionConfig(order="slack")`` and its deferred queue drains
+earliest-TTFT-deadline-first (deadline minus the live expected TTFT from
+``MetricsRegistry``) instead of strict FIFO -- starvation-free because
+parked deadlines are fixed while new arrivals' deadlines recede.
+
+With one replica the router is a transparent shim: ``Router.submit``
+streams are bit-identical to the bare server at temperature 0
+(``tests/test_cluster.py``).
+"""
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.policies import (LeastKVPolicy, PrefixAffinityPolicy,
+                                    ROUTING_POLICIES, RoundRobinPolicy,
+                                    make_policy)
+from repro.cluster.router import Replica, Router, RouterStream
+
+__all__ = [
+    "Router", "Replica", "RouterStream", "ClusterMetrics",
+    "ROUTING_POLICIES", "make_policy",
+    "RoundRobinPolicy", "LeastKVPolicy", "PrefixAffinityPolicy",
+]

@@ -1,0 +1,72 @@
+"""``ClusterMetrics``: the fleet-wide view over per-replica registries.
+
+Each ``AsyncLVLMServer`` keeps its own ``MetricsRegistry``; the cluster
+view MERGES the raw per-request records (not the per-replica summaries --
+percentiles do not average) and recomputes TTFT/TPOT/queue-wait
+percentiles, SLO attainment, and goodput over the whole fleet. On top it
+reports what only the router can see: dispatch and completion counts per
+replica, failovers, replica health, fleet KV load, aggregate prefix-cache
+hits, and fleet throughput against the SLOWEST replica's virtual clock
+(replicas decode in parallel, so the fleet makespan is the max, and
+fleet throughput is how the multi-replica trajectory in bench_serving
+shows its scaling).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.serving.metrics import MetricsRegistry
+
+
+class ClusterMetrics:
+    """Aggregates a ``Router``'s replicas; built by the Router itself."""
+
+    def __init__(self, router):
+        self.router = router
+
+    def merged_registry(self) -> MetricsRegistry:
+        merged = MetricsRegistry()
+        for rep in self.router.replicas:
+            merged.records.extend(rep.server.metrics.records)
+        return merged
+
+    def per_replica(self) -> List[Dict]:
+        out = []
+        for rep in self.router.replicas:
+            eng = rep.server.engine
+            s = rep.server.metrics.summary(eng)
+            s.update(state=rep.state, dispatched=rep.dispatched,
+                     completed=rep.completed, kv_load=rep.kv_load(),
+                     admitted=rep.server.admission.admitted,
+                     deferred=rep.server.admission.deferrals,
+                     disconnects=rep.server.disconnects,
+                     error=repr(rep.error) if rep.error else None)
+            if eng.ec.prefix_cache:
+                s["prefix_hit_tokens"] = eng.prefix_hit_tokens
+            out.append(s)
+        return out
+
+    def summary(self) -> Dict:
+        reps = self.router.replicas
+        out = self.merged_registry().summary()
+        out["replicas"] = len(reps)
+        out["replica_states"] = [rep.state for rep in reps]
+        out["dispatched_by_replica"] = [rep.dispatched for rep in reps]
+        out["completed_by_replica"] = [rep.completed for rep in reps]
+        out["failovers"] = self.router.failovers
+        out["routing_policy"] = self.router.policy.name
+        out["admitted"] = sum(rep.server.admission.admitted for rep in reps)
+        out["deferred"] = sum(rep.server.admission.deferrals for rep in reps)
+        out["disconnects"] = sum(rep.server.disconnects for rep in reps)
+        out["kv_load_by_replica"] = [rep.kv_load() for rep in reps]
+        # fleet makespan = slowest replica's virtual clock (they advance
+        # in parallel); throughput is fleet tokens over that makespan
+        clocks = [rep.server.engine.clock for rep in reps]
+        out["virtual_time_s"] = max(clocks) if clocks else 0.0
+        out["virtual_time_by_replica"] = clocks
+        if out["virtual_time_s"] > 0:
+            out["fleet_throughput_tok_per_s"] = (
+                out["tokens"] / out["virtual_time_s"])
+        out["prefix_hit_tokens"] = sum(
+            rep.server.engine.prefix_hit_tokens for rep in reps)
+        return out

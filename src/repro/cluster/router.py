@@ -1,0 +1,304 @@
+"""``Router``: one submit surface over N ``AsyncLVLMServer`` replicas.
+
+The router keeps the server's contract -- ``async for tok in
+router.submit(req)`` -- while dispatching each request to a replica via a
+routing policy (round-robin / least-KV / prefix-affinity), so a fleet of
+engines (possibly heterogeneous: different compression presets, decoder
+defaults, draft models per replica) serves one open-loop request stream:
+
+    router = lvlm.serve_cluster(replicas=2, routing="prefix_affinity")
+    async with router:
+        async for tok in router.submit(req):
+            ...
+
+Lifecycle:
+
+  * healthy   -- takes new work.
+  * draining  -- ``router.drain(i)``: finishes its in-flight streams but
+                 the policy never offers it new requests (``undrain``
+                 reverses it while the pump is still alive).
+  * dead      -- the replica's pump raised. Its queued-but-UNSTARTED
+                 requests (nothing generated yet: parked at the admission
+                 gate or still waiting/prefilling in the engine) FAIL OVER
+                 to a healthy sibling transparently -- the consumer's
+                 ``async for`` never sees the failure. Requests that had
+                 already streamed tokens re-raise to their consumer (the
+                 tokens cannot be un-sent); the router never re-runs a
+                 request that may have observable output.
+
+Failover is consumer-driven: the pump failure surfaces on the stream's
+next ``__anext__``, the ``RouterStream`` catches it, resets the request's
+runtime state, and re-dispatches among the survivors. Everything is
+event-loop-confined, like the serving layer underneath.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.serving.request import Request, State
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.policies import make_policy
+from repro.serving.server import AsyncLVLMServer, TokenStream
+
+
+class Replica:
+    """One ``AsyncLVLMServer`` plus its fleet-facing state and counters."""
+
+    def __init__(self, index: int, server: AsyncLVLMServer):
+        self.index = index
+        self.server = server
+        self.draining = False
+        self.dispatched = 0           # requests routed here (incl. retries)
+        self.completed = 0            # streams finished here (not aborted)
+        self.inflight: Dict[int, Request] = {}   # rid -> assigned request
+
+    # ------------------------------------------------------------ health --
+    @property
+    def dead(self) -> bool:
+        return self.server._pump_error is not None
+
+    @property
+    def state(self) -> str:
+        if self.dead:
+            return "dead"
+        return "draining" if self.draining else "ok"
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self.server._pump_error
+
+    # ------------------------------------------------- policy observables --
+    def kv_load(self) -> float:
+        """KV-reservation fraction of every live request ASSIGNED here --
+        admitted or not (a dispatched request will commit its reservation
+        the moment its consumer starts, so a join-the-shortest-queue
+        policy must see it immediately, not after first ``__anext__``)."""
+        eng = self.server.engine
+        need = sum(eng.kv_request_tokens(r) for r in self.inflight.values()
+                   if r.state is not State.DONE)
+        return need / max(1, eng.kv_capacity_tokens)
+
+    def queue_depth(self) -> int:
+        return self.server.admission.queue_depth
+
+    def prefix_block(self) -> int:
+        return self.server.engine.ec.prefix_block
+
+    def cached_prefix_len(self, tokens: Sequence[int]) -> int:
+        """Longest block-aligned prefix of ``tokens`` this replica's
+        engine caches. Pure probe (``touch=False``): no LRU refresh --
+        only a real prefill hit should touch recency."""
+        eng = self.server.engine
+        if not eng.ec.prefix_cache:
+            return 0
+        k, _hit = eng._prefix_lookup([int(x) for x in tokens], touch=False)
+        return k
+
+
+class RouterStream:
+    """One routed request's token channel: the ``TokenStream`` contract
+    (async iteration, ``cancel()``, ``tokens``, ``aborted``) plus
+    transparent failover while the request is still unstarted."""
+
+    def __init__(self, router: "Router", request: Request):
+        self._router = router
+        self.request = request
+        self.replica: Optional[Replica] = None
+        self._inner: Optional[TokenStream] = None
+        self._done = False
+        self.failovers = 0            # times THIS request was re-dispatched
+
+    @property
+    def tokens(self) -> List[int]:
+        return list(self.request.generated)
+
+    @property
+    def aborted(self) -> bool:
+        return self._inner is not None and self._inner.aborted
+
+    def cancel(self) -> bool:
+        self._router._streams.pop(self.request.rid, None)
+        if self.replica is not None:
+            self.replica.inflight.pop(self.request.rid, None)
+        self._done = True
+        return self._inner.cancel() if self._inner is not None else False
+
+    def __aiter__(self) -> "RouterStream":
+        return self
+
+    async def __anext__(self) -> int:
+        while True:
+            try:
+                return await self._inner.__anext__()
+            except StopAsyncIteration:
+                self._retire()
+                raise
+            except asyncio.CancelledError:
+                # the consumer task was cancelled (client went away): free
+                # the engine-side resources AND the router bookkeeping, or
+                # the rid / Replica.inflight entry would leak forever and
+                # least_kv would keep counting a request nobody runs
+                if not self._done:
+                    self.cancel()
+                raise
+            except Exception as exc:
+                if not self._failover_eligible():
+                    self._retire(failed=True)
+                    raise
+                self.failovers += 1
+                self._router.failovers += 1
+                try:
+                    self._router._redispatch(self, exc)
+                except BaseException:
+                    self._retire(failed=True)   # no sibling: free the rid
+                    raise
+                # loop: continue consuming from the new replica's stream
+
+    def _failover_eligible(self) -> bool:
+        """Retry only when the dead replica produced NOTHING observable:
+        the pump died and this request never emitted a token."""
+        return (self.replica is not None and self.replica.dead
+                and not self.request.generated)
+
+    def _retire(self, failed: bool = False) -> None:
+        if self._done:
+            return
+        self._done = True
+        self._router._streams.pop(self.request.rid, None)
+        if self.replica is not None:
+            self.replica.inflight.pop(self.request.rid, None)
+            if not failed and not self._inner.aborted:
+                self.replica.completed += 1
+
+
+class Router:
+    """Multi-engine front: routing policy + replica lifecycle + fleet
+    metrics over N ``AsyncLVLMServer`` replicas (see module docstring).
+
+    Build via ``LVLM.serve_cluster``; construct directly to mix replicas
+    of DIFFERENT models or hand-built servers.
+    """
+
+    def __init__(self, servers: Sequence[AsyncLVLMServer],
+                 routing="round_robin"):
+        if not servers:
+            raise ValueError("Router needs at least one replica")
+        self.replicas = [Replica(i, s) for i, s in enumerate(servers)]
+        self.policy = make_policy(routing)
+        self.metrics = ClusterMetrics(self)
+        self._streams: Dict[int, RouterStream] = {}
+        self.failovers = 0
+        for rep in self.replicas:
+            # server-initiated aborts (disconnect timeouts fire inside the
+            # replica pump, no consumer will ever retire the stream) must
+            # drop the router's bookkeeping too, or the rid leaks forever
+            rep.server.on_abort = self._on_server_abort
+
+    # -------------------------------------------------------- lifecycle --
+    async def start(self) -> "Router":
+        for rep in self.replicas:
+            await rep.server.start()
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop every replica. A replica whose pump already died does not
+        re-raise here: its failure either failed over or surfaced on the
+        affected streams, and is kept on ``Replica.error`` for reports."""
+        for rep in self.replicas:
+            try:
+                await rep.server.stop(drain=drain)
+            except BaseException:
+                if not rep.dead:      # pragma: no cover - defensive
+                    raise
+
+    async def __aenter__(self) -> "Router":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=not any(exc))
+
+    def drain(self, index: int) -> None:
+        """Take replica ``index`` out of rotation: in-flight streams
+        finish, new requests route elsewhere."""
+        self.replicas[index].draining = True
+
+    def undrain(self, index: int) -> None:
+        self.replicas[index].draining = False
+
+    # ----------------------------------------------------------- intake --
+    def _candidates(self) -> List[Replica]:
+        cands = [rep for rep in self.replicas if rep.state == "ok"]
+        if not cands:
+            raise RuntimeError("no healthy replica (all draining or dead)")
+        return cands
+
+    def submit(self, request: Request) -> RouterStream:
+        """Route ``request`` to a replica and return its stream. Like the
+        single-server ``submit``: never blocks (replica admission gates on
+        the stream's first ``__anext__``); rids are fleet-unique."""
+        if request.rid in self._streams:
+            raise ValueError(f"request id {request.rid} already streaming")
+        stream = RouterStream(self, request)
+        self._dispatch(stream)
+        self._streams[request.rid] = stream
+        return stream
+
+    def _dispatch(self, stream: RouterStream) -> None:
+        rep = self.policy.pick(stream.request, self._candidates())
+        rep.dispatched += 1
+        rep.inflight[stream.request.rid] = stream.request
+        stream.replica = rep
+        stream._inner = rep.server.submit(stream.request)
+
+    def _redispatch(self, stream: RouterStream, cause: BaseException) -> None:
+        """Failover: the request never started on the dead replica, so its
+        runtime state resets to a fresh submit and a sibling takes it."""
+        if stream.replica is not None:
+            stream.replica.inflight.pop(stream.request.rid, None)
+        _reset_for_retry(stream.request)
+        try:
+            self._dispatch(stream)
+        except (RuntimeError, ValueError) as exc:
+            raise RuntimeError(
+                f"request {stream.request.rid}: replica "
+                f"{stream.replica.index} died and no healthy sibling "
+                "remains") from cause
+
+    def abort(self, rid: int) -> bool:
+        stream = self._streams.get(rid)
+        return stream.cancel() if stream is not None else False
+
+    def _on_server_abort(self, rid: int) -> None:
+        """A replica aborted ``rid`` on its own (disconnect timeout,
+        direct ``server.abort``): retire the router stream so the rid
+        frees up. A consumer that comes back can still drain the tokens
+        already fanned out (the inner channel keeps them)."""
+        stream = self._streams.get(rid)
+        if stream is not None and stream._inner is not None \
+                and stream._inner.aborted:
+            stream._retire()
+
+    # ---------------------------------------------------------- reports --
+    def summary(self) -> Dict:
+        """Fleet-wide merged metrics (see ``ClusterMetrics.summary``)."""
+        return self.metrics.summary()
+
+
+def _reset_for_retry(req: Request) -> None:
+    """Return a never-started request to its pre-submit state so a sibling
+    replica can run it from scratch (failover path; the caller guarantees
+    ``req.generated`` is empty)."""
+    from repro.core.serving.request import State
+
+    assert not req.generated, "cannot retry a request with emitted tokens"
+    req.state = State.WAITING
+    req.prefill_done = 0
+    req.aborted = False
+    req.first_token_time = None
+    req.finish_time = None
+    req.served_tokens = 0
+    for attr in ("_slot", "_ve", "_prefix_pin", "_needs_ttft",
+                 "_gate_clock"):
+        if hasattr(req, attr):
+            delattr(req, attr)

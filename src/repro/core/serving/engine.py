@@ -371,19 +371,23 @@ class Engine:
         return False
 
     # ------------------------------------------------------------- prefix --
-    def _prefix_lookup(self, tokens: List[int]) -> Tuple[int, Optional[Tuple]]:
+    def _prefix_lookup(self, tokens: List[int], touch: bool = True
+                       ) -> Tuple[int, Optional[Tuple]]:
         """Longest block-aligned cached prefix of ``tokens``.
 
         Inserted keys are always multiples of ``prefix_block``, so probing
         descending block-aligned lengths is exact and O(len/block) probes
         per prefill instead of the old O(#entries x prefix_len) scan. A hit
-        is an LRU touch (move-to-end)."""
+        is an LRU touch (move-to-end) unless ``touch=False`` -- the pure
+        probe routing layers use (cluster prefix-affinity), where only a
+        real prefill hit should refresh recency."""
         bs = self.ec.prefix_block
         t = tuple(tokens)
         for k in range((len(t) // bs) * bs, 0, -bs):
             hit = self._prefix.get(t[:k])
             if hit is not None:
-                self._prefix.move_to_end(t[:k])
+                if touch:
+                    self._prefix.move_to_end(t[:k])
                 return k, hit
         return 0, None
 

@@ -12,6 +12,14 @@ through the unified ``repro.api`` facade.
     # (virtual clock) through AsyncLVLMServer, with KV-watermark admission
     # control; the JSON report adds queue-wait and admission counters:
     PYTHONPATH=src python -m repro.launch.serve --open-loop 2000
+
+    # multi-engine routing: N async server replicas behind one Router
+    # (--routing round_robin | least_kv | prefix_affinity), SLO-slack
+    # deferred queues, optional wall-clock pacing; the report is the
+    # fleet-wide ClusterMetrics summary:
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
+        --routing prefix_affinity --prefix-cache --shared-prefix 32 \
+        --open-loop 2000 --admission-order slack
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import json
 import numpy as np
 
 from repro.api import (AdmissionConfig, EngineConfig, GenerationConfig, LVLM,
-                       Request, resolve_compression)
+                       Request, ROUTING_POLICIES, resolve_compression)
 from repro.configs import ARCHS
 
 
@@ -73,6 +81,25 @@ def main() -> int:
                     help="admission high KV watermark (fraction of pool)")
     ap.add_argument("--low-watermark", type=float, default=0.7,
                     help="admission low (drain) KV watermark")
+    ap.add_argument("--admission-order", default="fifo",
+                    choices=("fifo", "slack"),
+                    help="deferred-queue order: FIFO or SLO-slack "
+                         "(earliest TTFT deadline first)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="async server replicas behind a cluster Router "
+                         "(>1 forces the async path)")
+    ap.add_argument("--routing", default="round_robin",
+                    choices=sorted(ROUTING_POLICIES),
+                    help="cluster routing policy (with --replicas > 1)")
+    ap.add_argument("--pacing", default="virtual",
+                    choices=("virtual", "wall"),
+                    help="'wall' sleeps each step's virtual duration in "
+                         "real time; 'virtual' is deterministic")
+    ap.add_argument("--pacing-scale", type=float, default=1.0,
+                    help="wall-pacing multiplier on the virtual duration")
+    ap.add_argument("--disconnect-timeout", type=float, default=None,
+                    metavar="S", help="abort streams whose consumer "
+                    "stopped reading for S wall seconds")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower/compile decode_32k under the production mesh")
     args = ap.parse_args()
@@ -105,16 +132,25 @@ def main() -> int:
                                              size=len(reqs)))
         for r, t in zip(reqs, arrivals):
             r.arrival = float(t)
-        server = lvlm.serve_async(
-            ec, gen=gen, admission=AdmissionConfig(
-                high_watermark=args.high_watermark,
-                low_watermark=args.low_watermark))
+    adm = AdmissionConfig(high_watermark=args.high_watermark,
+                          low_watermark=args.low_watermark,
+                          order=args.admission_order)
+    if args.open_loop > 0 or args.replicas > 1:
+        front = lvlm.serve_cluster(
+            args.replicas, ec, gen=gen, routing=args.routing,
+            admission=adm, pacing=args.pacing,
+            pacing_scale=args.pacing_scale,
+            disconnect_timeout_s=args.disconnect_timeout) \
+            if args.replicas > 1 else lvlm.serve_async(
+                ec, gen=gen, admission=adm, pacing=args.pacing,
+                pacing_scale=args.pacing_scale,
+                disconnect_timeout_s=args.disconnect_timeout)
 
         async def drive():
-            async with server:
+            async with front:
                 await asyncio.gather(
-                    *(_consume(server.submit(r)) for r in reqs))
-            return server.summary()
+                    *(_consume(front.submit(r)) for r in reqs))
+            return front.summary()
 
         stats = asyncio.run(drive())
     else:

@@ -29,6 +29,10 @@ Architecture (three small planes over one Engine):
                Everything runs on ONE event loop (the jitted step holds
                the GIL regardless); the win is request multiplexing and
                backpressure, not compute parallelism.
+               ``pacing="wall"`` sleeps each step's virtual duration in
+               real time (x ``pacing_scale``); ``disconnect_timeout_s``
+               aborts streams whose consumer stopped reading (same
+               resource release as an explicit cancel).
 
   admission.py ``AdmissionController`` -- high/low KV watermarks with
                hysteresis over ``Engine.kv_committed_tokens()`` (block-
@@ -36,7 +40,10 @@ Architecture (three small planes over one Engine):
                request). A submit that would push the pool past the high
                watermark AWAITS in a FIFO queue instead of crashing the
                engine (the paged pool's ``OutOfBlocksError`` failure mode);
-               waiters drain once usage falls below the low watermark.
+               waiters drain once usage falls below the low watermark --
+               strictly in order, FIFO or SLO-slack
+               (``AdmissionConfig(order="slack")``: earliest TTFT
+               deadline minus live expected TTFT first, starvation-free).
 
   metrics.py   ``MetricsRegistry`` -- per-request TTFT / TPOT / JCT /
                queue-wait records against the engine's deterministic

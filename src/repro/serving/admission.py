@@ -19,6 +19,15 @@ every live request -- measured against ``Engine.kv_capacity_tokens``:
   * ``max_inflight`` optionally bounds the number of live requests inside
     the engine (waiting + running) regardless of KV headroom.
 
+The deferred queue drains FIFO by default. ``order="slack"`` switches it
+to SLO-slack order: waiters are admitted earliest-deadline-first (each
+request's TTFT deadline minus the fleet's expected TTFT -- the serving
+layer installs the key via ``AdmissionController.order_key``). EDF over
+fixed per-request deadlines is starvation-free: a parked request's
+deadline never moves while every NEW arrival's deadline recedes, so the
+parked one eventually sorts first -- and the drain loop never admits past
+a waiter that does not fit, so sorting first guarantees admission next.
+
 The controller is event-loop-confined like the rest of the serving layer:
 no locks, admission decisions interleave only at awaits.
 """
@@ -27,7 +36,7 @@ from __future__ import annotations
 import asyncio
 import collections
 import dataclasses
-from typing import Deque, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -36,12 +45,15 @@ class AdmissionConfig:
     high_watermark: float = 0.9
     low_watermark: float = 0.7
     max_inflight: Optional[int] = None     # live requests in the engine
+    order: str = "fifo"                    # deferred-queue order: fifo|slack
 
     def __post_init__(self):
         if not 0.0 < self.high_watermark <= 1.0:
             raise ValueError("high_watermark must be in (0, 1]")
         if not 0.0 < self.low_watermark <= self.high_watermark:
             raise ValueError("low_watermark must be in (0, high_watermark]")
+        if self.order not in ("fifo", "slack"):
+            raise ValueError("order must be 'fifo' or 'slack'")
 
 
 class AdmissionController:
@@ -59,6 +71,10 @@ class AdmissionController:
         self._draining = False          # blocked until usage <= low mark
         self.admitted = 0
         self.deferrals = 0              # submits that had to wait
+        # deferred-queue ordering hook: None = strict FIFO; otherwise a
+        # key(request) callable -- waiters drain smallest-key-first (the
+        # serving layer installs an SLO-slack key for order="slack")
+        self.order_key: Optional[Callable[[object], float]] = None
 
     # ------------------------------------------------------------ state --
     def _live(self) -> int:
@@ -102,6 +118,7 @@ class AdmissionController:
             return True
         self.deferrals += 1
         self._draining = True
+        req._gate_clock = self.engine.clock   # deadline anchor for slack
         fut = asyncio.get_running_loop().create_future()
         entry = (fut, req, need)
         self._waiters.append(entry)
@@ -110,7 +127,8 @@ class AdmissionController:
             # retracts the entry and resolves False
             return await fut
         except asyncio.CancelledError:
-            if fut.done() and not fut.cancelled() and fut.result():
+            if fut.done() and not fut.cancelled() \
+                    and fut.exception() is None and fut.result():
                 # admitted between cancellation and wakeup: undo
                 self.engine.abort(req.rid)
             else:
@@ -134,10 +152,19 @@ class AdmissionController:
                 return True
         return False
 
+    def _drain_order(self) -> List[Tuple[asyncio.Future, object, int]]:
+        """Waiters in admission order: FIFO, or smallest ``order_key``
+        first (stable, so equal-slack waiters keep arrival order)."""
+        if self.order_key is None:
+            return list(self._waiters)
+        return sorted(self._waiters, key=lambda e: self.order_key(e[1]))
+
     def maybe_admit(self) -> int:
-        """Drain FIFO waiters when usage is back under the low watermark.
+        """Drain waiters when usage is back under the low watermark.
         Called by the pump after every engine step / abort. Returns the
-        number of requests admitted."""
+        number of requests admitted. Never admits PAST a waiter that does
+        not fit (no bypass), so the head of the drain order -- FIFO or
+        earliest slack -- is always the next admitted: starvation-free."""
         if not self._waiters:
             self._draining = False
             return 0
@@ -146,15 +173,23 @@ class AdmissionController:
                 > self.cfg.low_watermark * eng.kv_capacity_tokens):
             return 0
         n = 0
-        while self._waiters:
-            fut, req, need = self._waiters[0]
+        for entry in self._drain_order():
+            fut, req, need = entry
             if fut.cancelled():
-                self._waiters.popleft()
+                self._waiters.remove(entry)
                 continue
             if not self._can_admit(need):
                 break
-            self._waiters.popleft()
-            eng.submit(req)        # submit BEFORE resolving: accounting is
+            self._waiters.remove(entry)
+            try:
+                eng.submit(req)    # submit BEFORE resolving: accounting is
+            except Exception as exc:   # impossible request (can never fit
+                # a slot): surface to ITS caller, exactly like the
+                # fast-path submit would -- never into the pump, which
+                # calls this drain and must not die for one bad request
+                if not fut.done():
+                    fut.set_exception(exc)
+                continue
             self.admitted += 1     # correct even if the waiter runs late
             fut.set_result(True)
             n += 1

@@ -46,6 +46,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self.records: List[RequestRecord] = []
+        self._expected_ttft: Optional[float] = None   # cache, see below
 
     def observe(self, req: Request, *, queue_wait: float = 0.0,
                 decoder: str = "", aborted: bool = False) -> RequestRecord:
@@ -59,7 +60,20 @@ class MetricsRegistry:
             tpot_ok=(not aborted
                      and (req.tpot() or 0.0) <= req.slo.tpot_ms * 1e-3))
         self.records.append(rec)
+        self._expected_ttft = None        # new record invalidates the cache
         return rec
+
+    def expected_ttft(self) -> float:
+        """Live TTFT estimate (median of finished requests; 0.0 before any
+        finish). This is what SLO-slack dispatch subtracts from a waiter's
+        deadline: slack = deadline - now - expected_ttft. Cached per new
+        record: the slack key evaluates it per waiter per drain, which
+        must not rescan the whole history each time."""
+        if self._expected_ttft is None:
+            ttfts = [r.ttft for r in self.records
+                     if not r.aborted and r.ttft is not None]
+            self._expected_ttft = float(np.median(ttfts)) if ttfts else 0.0
+        return self._expected_ttft
 
     # ---------------------------------------------------------- summary --
     def summary(self, engine=None) -> Dict:

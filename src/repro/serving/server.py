@@ -29,6 +29,17 @@ Design points:
   * Determinism: the engine's virtual clock and temperature-0 decoding
     make the async path bit-identical to the sync facade
     (``tests/test_async_serving.py`` locks this down).
+  * Pacing: ``pacing="virtual"`` (default) runs steps back-to-back and
+    time exists only on the engine's virtual clock -- deterministic, the
+    mode every test uses. ``pacing="wall"`` sleeps each step's virtual
+    duration (scaled by ``pacing_scale``) in REAL time, so open-loop
+    arrivals, client think-time, and disconnect timeouts play out on the
+    wall clock the way they would against hardware.
+  * ``disconnect_timeout_s``: a consumer whose unread token backlog
+    stays untouched for that many WALL seconds (measured across post-step
+    checks, so loop-blocking jit time never counts against it) is treated
+    as hung up -- the request is aborted and every held resource
+    (KV slot, draft row, gamma lookahead, prefix pin) is released.
   * ``stop()`` drains by default (finishes in-flight work); pass
     ``drain=False`` to abort all live streams first.
 """
@@ -61,8 +72,13 @@ class TokenStream:
         self._submitted = False
         self._finished = False
         self.aborted = False
+        self.disconnected = False     # aborted by the disconnect timeout
         self.submit_clock: Optional[float] = None
         self.admit_clock: Optional[float] = None
+        # wall-clock consumer liveness (disconnect-timeout bookkeeping)
+        self._reading = False         # consumer currently inside __anext__
+        self._pending_since = None    # first post-step sighting of an
+        #                               unread backlog (None = no backlog)
 
     @property
     def queue_wait(self) -> float:
@@ -84,11 +100,16 @@ class TokenStream:
         return self
 
     async def __anext__(self) -> int:
-        if not self._submitted and not self._finished:
-            await self._server._admit(self)
-        if self._finished and self._q.empty():
-            raise StopAsyncIteration
-        item = await self._q.get()
+        self._reading = True            # an awaiting consumer is NOT hung up
+        try:
+            if not self._submitted and not self._finished:
+                await self._server._admit(self)
+            if self._finished and self._q.empty():
+                raise StopAsyncIteration
+            item = await self._q.get()
+        finally:
+            self._reading = False
+            self._pending_since = None  # the consumer is keeping up
         if item is _DONE:
             raise StopAsyncIteration
         if isinstance(item, BaseException):
@@ -106,17 +127,45 @@ class AsyncLVLMServer:
 
     def __init__(self, lvlm, *, engine_cfg=None, gen=None, draft=None,
                  admission: Optional[AdmissionConfig] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 pacing: str = "virtual", pacing_scale: float = 1.0,
+                 disconnect_timeout_s: Optional[float] = None):
+        if pacing not in ("virtual", "wall"):
+            raise ValueError("pacing must be 'virtual' or 'wall'")
         self.engine = lvlm._serve_engine(engine_cfg, gen, draft)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.admission = AdmissionController(
             admission if admission is not None else AdmissionConfig(),
             self.engine)
+        if self.admission.cfg.order == "slack":
+            self.admission.order_key = self._slack
+        self.pacing = pacing
+        self.pacing_scale = pacing_scale
+        self.disconnect_timeout_s = disconnect_timeout_s
+        self.disconnects = 0
+        # callback(rid) fired after ANY successful abort -- lets a fronting
+        # layer (the cluster Router) drop its own bookkeeping for aborts it
+        # did not initiate (disconnect timeouts fire inside the pump)
+        self.on_abort = None
         self._streams: Dict[int, TokenStream] = {}
         self._wake: Optional[asyncio.Event] = None
         self._pump_task: Optional[asyncio.Task] = None
         self._stopping = False
         self._pump_error: Optional[BaseException] = None
+
+    def _slack(self, req: Request) -> float:
+        """SLO slack of a deferred request: its TTFT deadline (anchored at
+        the later of arrival and the clock when it was parked) minus now
+        and minus the fleet's live expected TTFT. The clock and
+        expected-TTFT terms are uniform across the waiters of one drain,
+        so the resulting ORDER is earliest-deadline-first; they are kept
+        so the value is a true (sign-meaningful) slack for telemetry and
+        future deadline-shedding policies. Deadlines are FIXED per request
+        while new arrivals' deadlines recede -- EDF drain order is
+        therefore starvation-free under saturation."""
+        anchor = max(req.arrival, getattr(req, "_gate_clock", 0.0))
+        deadline = anchor + req.slo.ttft_ms * 1e-3
+        return deadline - self.engine.clock - self.metrics.expected_ttft()
 
     # -------------------------------------------------------- lifecycle --
     async def start(self) -> "AsyncLVLMServer":
@@ -199,7 +248,10 @@ class AsyncLVLMServer:
             self._fan_out(stream)
             self._finish_stream(stream, aborted=True)
         self.admission.maybe_admit()     # freed capacity -> drain waiters
-        return ok or stream is not None
+        aborted = ok or stream is not None
+        if aborted and self.on_abort is not None:
+            self.on_abort(rid)
+        return aborted
 
     # ------------------------------------------------------------- pump --
     async def _pump(self) -> None:
@@ -212,13 +264,48 @@ class AsyncLVLMServer:
                     self._wake.clear()
                     await self._wake.wait()
                     continue
+                before = eng.clock
                 eng.step()               # one jitted grouped iteration
                 self._drain()
+                self._check_disconnects()
                 self.admission.maybe_admit()
-                await asyncio.sleep(0)   # let clients consume this step
+                if self.pacing == "wall":
+                    # sleep the step's virtual duration in real time (the
+                    # analytic per-step latency estimate), scaled; clients
+                    # consume during the sleep just as they would while a
+                    # real accelerator computes
+                    await asyncio.sleep(
+                        max(0.0, (eng.clock - before) * self.pacing_scale))
+                else:
+                    await asyncio.sleep(0)   # let clients consume this step
         except BaseException as exc:     # fail streams: never hang clients
             self._fail(exc)
             raise
+
+    def _check_disconnects(self) -> None:
+        """Abort streams whose consumer hung up: tokens stayed queued
+        unread with no ``__anext__`` awaiting for more than
+        ``disconnect_timeout_s`` WALL seconds. Backlog age is anchored at
+        the first POST-step sighting (this method runs right after each
+        step) and every read clears it, so time the event loop spent
+        blocked inside a jitted step -- when the consumer could not
+        possibly run -- never counts against the consumer. The abort
+        releases the slot / draft row / gamma lookahead / prefix pin
+        exactly like an explicit ``cancel()``."""
+        if self.disconnect_timeout_s is None or not self._streams:
+            return
+        now = asyncio.get_running_loop().time()
+        for rid, stream in list(self._streams.items()):
+            if stream._reading or stream._q.empty():
+                stream._pending_since = None   # consuming / nothing unread
+                continue
+            if stream._pending_since is None:
+                stream._pending_since = now    # backlog first seen NOW
+                continue
+            if now - stream._pending_since > self.disconnect_timeout_s:
+                stream.disconnected = True
+                self.disconnects += 1
+                self.abort(rid)
 
     def _fail(self, exc: BaseException) -> None:
         """Pump died: every live stream and admission waiter must learn,
@@ -258,6 +345,7 @@ class AsyncLVLMServer:
         out = self.metrics.summary(self.engine)
         out["admitted"] = self.admission.admitted
         out["deferred"] = self.admission.deferrals
+        out["disconnects"] = self.disconnects
         out.update({f"decoder_stats/{k}": v
                     for k, v in self.engine.decoder_stats().items()
                     if not isinstance(v, (list, dict))})

@@ -275,6 +275,32 @@ def test_admission_defers_instead_of_raising_when_saturated(lvlm):
     assert server.summary()["queue_wait_p99"] > 0
 
 
+def test_oversized_deferred_request_raises_without_killing_pump(lvlm):
+    """Regression: an impossible request (can NEVER fit a slot) that got
+    PARKED at the admission gate (busy engine) must surface its
+    ValueError to ITS caller when the drain reaches it -- never detonate
+    inside the pump and fail every other stream."""
+    ok = Request(rid=0, tokens=_prompts(1, seed=15, lo=12, hi=13)[0],
+                 max_new_tokens=MAX_NEW)
+    big = Request(rid=1, tokens=list(range(1, 40)), max_new_tokens=64)
+    adm = AdmissionConfig(high_watermark=0.2, low_watermark=0.2)
+    server = lvlm.serve_async(_ec(cache_len=64), gen=GEN, admission=adm)
+
+    async def drive():
+        async with server:
+            t0 = asyncio.create_task(_consume(server.submit(ok)))
+            await asyncio.sleep(0)          # let `ok` reach the engine first
+            with pytest.raises(ValueError, match="needs"):
+                await _consume(server.submit(big))     # parked, then drained
+            return await t0
+
+    out0 = asyncio.run(drive())
+    assert len(out0) == MAX_NEW                        # pump survived
+    assert server._pump_error is None
+    assert server.admission.deferrals == 1
+    assert server.engine.kv_committed_tokens() == 0
+
+
 def test_admission_single_oversized_request_still_progresses(lvlm):
     """An idle engine always admits (a lone request must progress even if
     it alone exceeds the high watermark fraction)."""
@@ -307,6 +333,153 @@ def test_prefix_pin_blocks_eviction_until_release(lvlm):
     assert eng._prefix_pins == {}
     eng._prefix_insert(list(range(201, 209)), 0, 8)   # now A can go
     assert key not in eng._prefix
+
+
+# ----------------------------------------------- pacing & disconnects --
+
+
+def test_wall_pacing_sleeps_per_step_virtual_durations(lvlm, monkeypatch):
+    """pacing="wall": after every engine step the pump sleeps that step's
+    virtual duration x pacing_scale (real per-step latency estimate);
+    pacing="virtual" never sleeps a positive duration. Tokens are
+    identical either way. Sleeps are recorded, not timed, so the test is
+    deterministic."""
+    recorded = []
+    real_sleep = asyncio.sleep
+
+    async def spy_sleep(dt, *a, **kw):
+        recorded.append(dt)
+        await real_sleep(0)
+
+    monkeypatch.setattr(asyncio, "sleep", spy_sleep)
+    outs = {}
+    for pacing in ("virtual", "wall"):
+        recorded.clear()
+        server = lvlm.serve_async(_ec(), gen=GEN, pacing=pacing,
+                                  pacing_scale=3.0)
+        reqs = _reqs(_prompts(2, seed=11))
+        outs[pacing] = _serve_all_on(server, reqs)
+        if pacing == "virtual":
+            assert all(dt == 0 for dt in recorded)
+        else:
+            slept = sum(dt for dt in recorded if dt > 0)
+            assert slept == pytest.approx(server.engine.clock * 3.0,
+                                          rel=1e-6)
+    assert outs["wall"] == outs["virtual"]
+
+
+def _serve_all_on(server, reqs):
+    async def drive():
+        async with server:
+            outs = await asyncio.gather(
+                *(_consume(server.submit(r)) for r in reqs))
+        return outs
+
+    outs = asyncio.run(drive())
+    return {r.rid: list(o) for r, o in zip(reqs, outs)}
+
+
+def test_bad_pacing_rejected(lvlm):
+    with pytest.raises(ValueError, match="pacing"):
+        lvlm.serve_async(_ec(), gen=GEN, pacing="warp")
+
+
+def test_disconnect_timeout_aborts_stalled_consumer(lvlm):
+    """A consumer that stops reading for disconnect_timeout_s wall
+    seconds is treated as hung up: its request is Engine.abort-ed and the
+    slot / speculative draft row / gamma lookahead / pool accounting
+    return to baseline while a live consumer keeps streaming."""
+    p0, p1 = _prompts(2, seed=12, lo=10, hi=12)
+    r_stall = Request(rid=0, tokens=p0, max_new_tokens=24,
+                      decoder="speculative")
+    r_live = Request(rid=1, tokens=p1, max_new_tokens=24)
+    server = lvlm.serve_async(_ec(), gen=GEN, disconnect_timeout_s=0.05)
+    eng = server.engine
+    # pace the (wall-time-free virtual) engine so the stalled request
+    # CANNOT finish before the timeout trips: >= 20ms per step means 24
+    # tokens need >= 120ms of work, while the 50ms timeout fires after
+    # ~3 steps of consumer silence -- deterministic, not a wall-clock race
+    real_step = eng.step
+
+    def paced_step():
+        import time
+        time.sleep(0.02)
+        return real_step()
+
+    eng.step = paced_step
+
+    async def drive():
+        async with server:
+            s0 = server.submit(r_stall)
+            t1 = asyncio.create_task(_consume(server.submit(r_live)))
+            got = []
+            async for tok in s0:
+                got.append(tok)
+                if len(got) == 2:
+                    await asyncio.sleep(0.5)     # consumer goes silent
+            out1 = await t1
+            return got, out1, s0
+
+    got, out1, s0 = asyncio.run(drive())
+    assert r_stall.aborted and s0.aborted and s0.disconnected
+    assert 2 <= len(got) < 24                    # stream ended early
+    assert len(out1) == 24 and not r_live.aborted
+    assert server.disconnects == 1
+    # pool accounting back to baseline: no slot, no draft row, no KV
+    assert eng.kv_committed_tokens() == 0
+    assert all(r is None for r in eng.slot_req)
+    assert eng._decoders["speculative"].bound_slots() == set()
+    s = server.summary()
+    assert s["aborted"] == 1 and s["finished"] == 1 and s["disconnects"] == 1
+
+
+def test_waiting_consumer_is_not_a_disconnect(lvlm):
+    """A consumer blocked INSIDE __anext__ (waiting on the engine) or
+    promptly draining each token is never treated as hung up, even with
+    an absurdly tight timeout -- only queued-unread tokens count."""
+    server = lvlm.serve_async(_ec(), gen=GEN, disconnect_timeout_s=1e-9)
+    out = _serve_all_on(server, [Request(rid=0,
+                                         tokens=_prompts(1, seed=13)[0],
+                                         max_new_tokens=MAX_NEW)])
+    assert len(out[0]) == MAX_NEW
+    assert server.disconnects == 0
+
+
+# -------------------------------------------------- slack admission --
+
+
+@pytest.mark.parametrize("order", ["fifo", "slack"])
+def test_deferred_queue_order(lvlm, order):
+    """Saturated gate: with order="slack" the tighter-deadline waiter is
+    admitted first even though it queued SECOND; strict FIFO preserves
+    submission order. (The cluster layer's SLO-aware dispatch is exactly
+    this, per replica.)"""
+    prompts = _prompts(3, seed=14, lo=12, hi=15)
+    r0 = Request(rid=0, tokens=prompts[0], max_new_tokens=MAX_NEW)
+    relaxed = Request(rid=1, tokens=prompts[1], max_new_tokens=MAX_NEW)
+    urgent = Request(rid=2, tokens=prompts[2], max_new_tokens=MAX_NEW)
+    relaxed.slo.ttft_ms = 60_000.0
+    urgent.slo.ttft_ms = 1.0
+    adm = AdmissionConfig(high_watermark=0.9, low_watermark=0.9,
+                          max_inflight=1, order=order)
+    server = lvlm.serve_async(_ec(), gen=GEN, admission=adm)
+
+    async def drive():
+        async with server:
+            s0 = server.submit(r0)             # occupies the single slot
+            s_relaxed = server.submit(relaxed)  # queues first
+            s_urgent = server.submit(urgent)    # queues second, tight SLO
+            outs = await asyncio.gather(_consume(s0), _consume(s_relaxed),
+                                        _consume(s_urgent))
+            return outs, s_relaxed, s_urgent
+
+    outs, s_relaxed, s_urgent = asyncio.run(drive())
+    assert all(len(o) == MAX_NEW for o in outs)
+    assert server.admission.deferrals == 2
+    if order == "slack":
+        assert s_urgent.admit_clock < s_relaxed.admit_clock
+    else:
+        assert s_relaxed.admit_clock < s_urgent.admit_clock
 
 
 # ------------------------------------------------------------ metrics --
