@@ -6,6 +6,9 @@ Real engine, real smoke model, virtual-clock metrics:
   * prefix caching on shared-system-prompt traffic,
   * per-request decoder mixing: greedy + sampling + speculative +
     early-exit requests in ONE engine run (batched speculative slots),
+  * per-request COMPRESSION mixing (``--compression a,b``): VLM traffic
+    cycling strategies in one engine through the async server, emitting
+    per-strategy prefill-token-reduction in a ``# open_loop`` record,
   * open-loop Poisson traffic through the ASYNC serving stack at EVERY
     replica count (cluster Router, least-KV routing, SLO-slack deferred
     queues): one ``# open_loop`` JSON record per (rate, replica count)
@@ -157,6 +160,57 @@ def open_loop(lvlm: LVLM, replica_counts=(1, 2)) -> None:
                   flush=True)
 
 
+def compression_mix(presets=("none", "fastv-0.5")) -> None:
+    """Mixed-compression VLM workload: per-request ``Request.compression``
+    cycles over ``presets`` in ONE engine (dim 1 at serving scale),
+    open-loop Poisson arrivals through the async server. Emits one
+    ``# open_loop`` JSON record whose ``prefill_token_reduction_by_
+    strategy`` charts how much prefill each strategy saved -- the
+    EffiVLM-BENCH-style sweep signal, measured on heterogeneous traffic
+    instead of per-preset engine rebuilds."""
+    vlm = LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+    rng = np.random.RandomState(21)
+    reqs = _reqs(vlm.cfg, 12, seed=22, lo=8, hi=20, new=6)
+    arrivals = np.cumsum(rng.exponential(1.0 / 1000.0, size=len(reqs)))
+    for i, r in enumerate(reqs):
+        r.arrival = float(arrivals[i])
+        r.visual_embeds = rng.randn(
+            vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+        ).astype(np.float32) * 0.02
+        r.compression = presets[i % len(presets)]
+    server = vlm.serve_async(
+        EngineConfig(max_batch=4, cache_len=128, temperature=0.0),
+        gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                             max_new_tokens=6),
+        admission=AdmissionConfig(high_watermark=0.9, low_watermark=0.7))
+
+    async def drive():
+        async def consume(r):
+            return [t async for t in server.submit(r)]
+        async with server:
+            await asyncio.gather(*(consume(r) for r in reqs))
+        return server.summary()
+
+    out = asyncio.run(drive())
+    reduction = {
+        name.split("/")[1]: out[name]
+        for name in out if name.startswith("compression/")
+        and name.endswith("/prefill_token_reduction")}
+    emit("serve/compression_mix/" + "+".join(presets),
+         out["virtual_time_s"] * 1e6,
+         ";".join(f"{n}={r:.2f}" for n, r in sorted(reduction.items()))
+         + f";{_pcts(out, 'ttft')};finished={out['finished']}")
+    record = {"scenario": "open_loop/compression_mix",
+              "presets": list(presets),
+              "finished": out["finished"],
+              "prefill_token_reduction_by_strategy": reduction,
+              "slo_goodput": out["slo_goodput"],
+              "virtual_time_s": out["virtual_time_s"]}
+    record.update({k: out[k] for k in out
+                   if k.startswith(("ttft_p", "tpot_p"))})
+    print("# open_loop " + json.dumps(record, default=float), flush=True)
+
+
 def disaggregation() -> None:
     cost = CostModel(prefill_us_per_token=30.0, decode_us_per_token=600.0,
                      decode_us_per_ctx_token=0.01,
@@ -181,11 +235,13 @@ def disaggregation() -> None:
              f"goodput={g:.2f}")
 
 
-def run(replica_counts=(1, 2)) -> None:
+def run(replica_counts=(1, 2),
+        compression=("none", "fastv-0.5")) -> None:
     lvlm = LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
     schedulers(lvlm)
     prefix_cache(lvlm)
     mixed_decoders(lvlm)
+    compression_mix(presets=compression)
     open_loop(lvlm, replica_counts=replica_counts)
     disaggregation()
 
@@ -197,15 +253,20 @@ def main() -> None:
     ap.add_argument("--replicas", default="1,2",
                     help="comma-separated replica counts for the "
                          "open-loop trajectory (e.g. '2' or '1,2,4')")
+    ap.add_argument("--compression", default="none,fastv-0.5",
+                    help="comma-separated compression strategies for the "
+                         "mixed-workload scenario (assigned per-request "
+                         "round-robin, e.g. 'none,framefusion-0.25')")
     ap.add_argument("--only-open-loop", action="store_true",
                     help="skip the closed-loop scenarios")
     args = ap.parse_args()
     counts = tuple(int(x) for x in str(args.replicas).split(",") if x)
+    presets = tuple(p for p in str(args.compression).split(",") if p)
     if args.only_open_loop:
         open_loop(LVLM.from_pretrained("phi4-mini-3.8b", smoke=True),
                   replica_counts=counts)
     else:
-        run(replica_counts=counts)
+        run(replica_counts=counts, compression=presets)
 
 
 if __name__ == "__main__":

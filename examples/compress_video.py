@@ -2,11 +2,19 @@
 "video" with static background + moving object, compressed by each
 strategy, reporting token counts and reconstruction quality.
 
+The generic reductions run through the FACADE compression API
+(``repro.api.compressors.make_compressor`` -- the same strategy objects
+``Request.compression`` selects per request in the serving engine), so
+what this example prints is exactly what a served request experiences;
+the video-specific schedulers (temporal merge, DyCoke, Dynamic-VLM)
+remain library-level.
+
     PYTHONPATH=src python examples/compress_video.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.compressors import make_compressor
 from repro.core.token_compression import video as V
 
 
@@ -47,9 +55,18 @@ def main():
     comp, info = V.dynamic_compress(vid, token_budget=96)
     print(f"Dynamic-VLM budget=96     : {total} -> {comp.shape[1]} tokens")
 
-    ff, info = V.framefusion(vid, keep=64)
-    print(f"FrameFusion prune+merge   : {total} -> {ff.shape[1]} tokens "
-          f"(absorbed {info.get('absorbed', '?')})")
+    # generic strategies via the facade: the SAME objects a serving
+    # request selects with Request.compression="framefusion-0.0625" etc.;
+    # compressed_token_count is the shape-only count the engine's KV
+    # accounting (admission watermarks, least_kv routing) reserves
+    flat = vid.reshape(1, total, d)
+    for preset in ("framefusion-0.0625", "fastv-0.25", "tome-0.5"):
+        strat = make_compressor(preset)
+        out, _idx, _info = strat.compress_prefill(flat)
+        accounted = strat.compressed_token_count(total)
+        assert out.shape[1] == accounted, (preset, out.shape, accounted)
+        print(f"{preset:26s}: {total} -> {out.shape[1]} tokens "
+              f"(KV accounting reserves {accounted})")
 
     # the blob (the only moving content) must survive dynamic compression
     blob_tok = vid[0, 0, 0]

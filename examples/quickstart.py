@@ -6,8 +6,7 @@ then serve a batch through the taxonomy engine.
 """
 import numpy as np
 
-from repro.api import (EngineConfig, GenerationConfig, LVLM, Request,
-                       resolve_compression)
+from repro.api import EngineConfig, GenerationConfig, LVLM, Request
 
 
 def main():
@@ -42,21 +41,30 @@ def main():
     print("streamed :", list(lvlm.generate_stream(
         prompt, GenerationConfig(max_new_tokens=8), visual_embeds=ve)))
 
-    # 5. serve a batch: continuous batching + virtual-clock metrics
+    # 5. serve a batch: continuous batching + virtual-clock metrics.
+    # Compression is configured via the FACADE (GenerationConfig default,
+    # Request.compression per-request override), never by mutating
+    # EngineConfig.compression -- here every other request opts into a
+    # harsher prune-then-merge strategy in the same engine run.
     reqs = [Request(rid=i,
                     tokens=list(rng.randint(1, lvlm.cfg.vocab_size,
                                             size=12)),
                     visual_embeds=rng.randn(
                         lvlm.cfg.num_visual_tokens,
                         lvlm.cfg.d_model).astype(np.float32) * 0.02,
-                    max_new_tokens=8)
+                    max_new_tokens=8,
+                    compression="framefusion-0.25" if i % 2 else None)
             for i in range(6)]
-    report = lvlm.serve(reqs, EngineConfig(
-        max_batch=4, cache_len=128, scheduler="continuous",
-        compression=resolve_compression("divprune-0.5")))
+    report = lvlm.serve(
+        reqs,
+        EngineConfig(max_batch=4, cache_len=128, scheduler="continuous"),
+        gen=GenerationConfig(max_new_tokens=8, compression="divprune-0.5"))
     stats = report.stats
     print(f"served {stats['finished']} requests, {stats['tokens']} tokens, "
           f"throughput {stats['throughput_tok_per_s']:.0f} tok/s (virtual)")
+    for name, cs in report.engine.compression_stats().items():
+        print(f"  {name}: prefill token reduction "
+              f"{cs['prefill_token_reduction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,15 @@ reserved per speculative slot for the block verify:
             Request(rid=1, tokens=p1, decoder="greedy")]
     rep = lvlm.serve(reqs, EngineConfig(max_batch=4, cache_len=256))
     rep.stats["speculative/acceptance"]       # mixed stats are prefixed
+
+COMPRESSION has the same per-request parity (``repro.api.compressors``):
+``Request.compression`` names a strategy resolved against the engine's
+compressor registry, so one batch mixes ``none`` chat traffic with
+``framefusion-0.25`` video traffic, with admission / KV accounting /
+prefix-cache keys all using post-compression token counts.
 """
+from repro.api.compressors import (
+    CompressionStrategy, compressed_token_count, make_compressor)
 from repro.api.decoders import (
     DECODERS, EarlyExitDecoder, GreedyDecoder, SamplingDecoder,
     SpeculativeDecoder, make_decoder)
@@ -47,6 +55,7 @@ __all__ = [
     "GreedyDecoder", "SamplingDecoder", "SpeculativeDecoder",
     "EarlyExitDecoder",
     "COMPRESSION_PRESETS", "resolve_compression", "CompressionConfig",
+    "CompressionStrategy", "make_compressor", "compressed_token_count",
     "EngineConfig", "Request",
     "AsyncLVLMServer", "TokenStream", "AdmissionConfig", "MetricsRegistry",
     "Router", "ClusterMetrics", "ROUTING_POLICIES",

@@ -16,6 +16,7 @@ from typing import Union
 
 from repro.configs.base import CompressionConfig
 from repro.core.token_compression import PRUNERS
+from repro.core.token_compression.policy import LIVE_KV_SELECTORS
 
 DECODER_NAMES = ("greedy", "sampling", "speculative", "early_exit")
 
@@ -33,15 +34,13 @@ COMPRESSION_PRESETS = {
     "cdpruner-0.5": CompressionConfig(token_pruner="cdpruner",
                                       keep_ratio=0.5),
     "tome-0.5": CompressionConfig(token_merger="tome", keep_ratio=0.5),
+    "framefusion-0.25": CompressionConfig(token_merger="framefusion",
+                                          keep_ratio=0.25),
     # dim 2a: live KV-cache compaction in the engine (attention-free
     # selectors; attention-score selectors stay library-level)
     "streaming-kv": CompressionConfig(kv_selector="streaming", kv_budget=64),
     "l2-kv": CompressionConfig(kv_selector="l2", kv_budget=64),
 }
-
-
-# KV selectors the engine can run live (attention-free; survey §V)
-_LIVE_KV_SELECTORS = ("streaming", "l2")
 
 
 def resolve_compression(
@@ -60,7 +59,7 @@ def resolve_compression(
         return COMPRESSION_PRESETS[spec]
     head, sep, tail = spec.rpartition("-")
     if sep:
-        for sel in _LIVE_KV_SELECTORS:
+        for sel in LIVE_KV_SELECTORS:
             if head == f"{sel}-kv" and tail.isdigit() and int(tail) > 0:
                 return CompressionConfig(kv_selector=sel,
                                          kv_budget=int(tail))
@@ -76,7 +75,7 @@ def resolve_compression(
     known = (sorted(COMPRESSION_PRESETS)
              + [f"<{p}>-<keep>"
                 for p in sorted(list(PRUNERS) + list(_MERGERS))]
-             + [f"<{s}>-kv-<budget>" for s in _LIVE_KV_SELECTORS])
+             + [f"<{s}>-kv-<budget>" for s in LIVE_KV_SELECTORS])
     raise ValueError(f"unknown compression preset {spec!r}; known: {known}")
 
 

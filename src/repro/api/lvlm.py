@@ -25,9 +25,9 @@ from typing import Dict, Iterator, List, Optional, Sequence, Union
 import jax
 import numpy as np
 
+from repro.api.compressors import make_compressor
 from repro.api.decoders import make_decoder
-from repro.api.generation import (DECODER_NAMES, GenerationConfig,
-                                  resolve_compression)
+from repro.api.generation import DECODER_NAMES, GenerationConfig
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core.serving import Engine, EngineConfig, Request
@@ -118,7 +118,8 @@ class LVLM:
 
     def _build_engine(self, gen: GenerationConfig, *, max_batch: int,
                       cache_len: int, draft: Optional["LVLM"] = None,
-                      engine_cfg: Optional[EngineConfig] = None) -> Engine:
+                      engine_cfg: Optional[EngineConfig] = None,
+                      compressors: Optional[Dict] = None) -> Engine:
         if engine_cfg is None:
             engine_cfg = EngineConfig(max_batch=max_batch,
                                       cache_len=cache_len,
@@ -130,16 +131,20 @@ class LVLM:
         # goes on the engine: greedy decoding is enforced per group by the
         # greedy instances themselves, so a greedy DEFAULT must not zero
         # the temperature of per-request sampling/speculative overrides.
+        # gen.compression is sugar for a NAMED default strategy registered
+        # with the engine (EngineConfig.compression is never mutated);
+        # per-request overrides resolve against the same registry.
         engine_cfg = dataclasses.replace(
             engine_cfg,
             temperature=gen.temperature,
             top_k=gen.top_k, top_p=gen.top_p,
             eos_id=gen.eos_id, seed=gen.seed,
-            decoder=gen.decoder,
-            compression=gen.resolved_compression())
+            decoder=gen.decoder)
         decoders = self._strategy_decoders(gen, draft)
         return Engine(self.model, self.params, engine_cfg,
-                      decoder=decoders.get(gen.decoder), decoders=decoders)
+                      decoder=decoders.get(gen.decoder), decoders=decoders,
+                      compressor=make_compressor(gen.compression),
+                      compressors=compressors)
 
     def _requests(self, prompts, gen, visual_embeds) -> List[Request]:
         n = len(prompts)
@@ -167,7 +172,8 @@ class LVLM:
     # --------------------------------------------------------- generate --
     def generate(self, prompts, gen: Optional[GenerationConfig] = None, *,
                  visual_embeds=None, draft: Optional["LVLM"] = None,
-                 engine_cfg: Optional[EngineConfig] = None
+                 engine_cfg: Optional[EngineConfig] = None,
+                 compressors: Optional[Dict] = None
                  ) -> Union[GenerationResult, List[GenerationResult]]:
         """Generate continuations with any decoder strategy.
 
@@ -175,7 +181,9 @@ class LVLM:
         prompt returns a single ``GenerationResult``). ``visual_embeds``:
         one [Nv, d] array (single prompt) or a list parallel to ``prompts``.
         ``draft``: an ``LVLM`` used as the speculative draft model (None ->
-        self-draft).
+        self-draft). ``compressors``: extra named compression strategies
+        registered with the engine (preset/parametric names resolve
+        without registration).
         """
         gen = gen if gen is not None else GenerationConfig()
         # every strategy is a batched slot strategy: multiple prompts run
@@ -188,7 +196,7 @@ class LVLM:
         eng = self._build_engine(
             gen, max_batch=min(8, max(1, len(reqs))),
             cache_len=self._cache_len(reqs, gen), draft=draft,
-            engine_cfg=engine_cfg)
+            engine_cfg=engine_cfg, compressors=compressors)
         for r in reqs:
             eng.submit(r)
         run_stats = eng.run()
@@ -230,11 +238,12 @@ class LVLM:
     # ------------------------------------------------------------ serve --
     def _serve_engine(self, engine_cfg: Optional[EngineConfig] = None,
                       gen: Optional[GenerationConfig] = None,
-                      draft: Optional["LVLM"] = None) -> Engine:
+                      draft: Optional["LVLM"] = None,
+                      compressors: Optional[Dict] = None) -> Engine:
         """Serving-engine wiring shared by ``serve`` (sync, closed-loop)
         and ``serve_async`` (streaming, open-loop): resolve the default
         strategy + generation knobs onto the EngineConfig and register
-        every named per-request strategy."""
+        every named per-request strategy (decoders AND compressors)."""
         ec = engine_cfg if engine_cfg is not None else EngineConfig()
         g = gen if gen is not None else GenerationConfig(
             decoder=ec.decoder if ec.decoder in DECODER_NAMES else "sampling",
@@ -242,20 +251,24 @@ class LVLM:
             eos_id=ec.eos_id, compression=ec.compression)
         if gen is not None:
             # raw temperature: the greedy strategy forces 0 per group, so
-            # per-request sampling overrides keep the caller's temperature
+            # per-request sampling overrides keep the caller's temperature.
+            # gen.compression becomes the engine's registered DEFAULT
+            # strategy below -- EngineConfig.compression is left alone.
             ec = dataclasses.replace(
                 ec, decoder=gen.decoder,
                 temperature=gen.temperature,
-                top_k=gen.top_k, top_p=gen.top_p, eos_id=gen.eos_id,
-                compression=gen.resolved_compression())
+                top_k=gen.top_k, top_p=gen.top_p, eos_id=gen.eos_id)
         decoders = self._strategy_decoders(g, draft)
         return Engine(self.model, self.params, ec,
-                      decoder=decoders.get(ec.decoder), decoders=decoders)
+                      decoder=decoders.get(ec.decoder), decoders=decoders,
+                      compressor=make_compressor(g.compression),
+                      compressors=compressors)
 
     def serve(self, requests: List[Request],
               engine_cfg: Optional[EngineConfig] = None,
               gen: Optional[GenerationConfig] = None,
-              draft: Optional["LVLM"] = None) -> ServeResult:
+              draft: Optional["LVLM"] = None,
+              compressors: Optional[Dict] = None) -> ServeResult:
         """Full serving run: scheduler + batching + virtual-clock metrics.
 
         ``engine_cfg`` keeps its internal-layer knobs (scheduler, batch,
@@ -269,23 +282,36 @@ class LVLM:
         draft model for both the default and per-request speculative
         requests (None -> self-draft).
 
+        Like decoders, COMPRESSION is per-request: ``Request.compression``
+        names a strategy (any preset/parametric name, or a key of
+        ``compressors``) resolved against the engine registry, so one
+        batch mixes e.g. ``none`` chat traffic with ``framefusion-0.25``
+        video traffic; admission and KV accounting use each request's
+        post-compression token count.
+
         Stats include TTFT/TPOT percentiles (p50/p95/p99), per-request
-        SLO attainment fractions, and the virtual-clock decode cost per
-        strategy group (``decode_cost_by_group``). For open-loop traffic
-        with streaming delivery and cancellation, see ``serve_async``.
+        SLO attainment fractions, the virtual-clock decode cost per
+        strategy group (``decode_cost_by_group``), and per-compression-
+        strategy prefill token reduction (``compression/<name>/...``).
+        For open-loop traffic with streaming delivery and cancellation,
+        see ``serve_async``.
         """
-        eng = self._serve_engine(engine_cfg, gen, draft)
+        eng = self._serve_engine(engine_cfg, gen, draft,
+                                 compressors=compressors)
         for r in requests:
             eng.submit(r)
         stats = dict(eng.run(), **eng.decoder_stats())
         stats["decode_cost_by_group"] = dict(eng.group_costs)
+        for name, cs in eng.compression_stats().items():
+            for k, v in cs.items():
+                stats[f"compression/{name}/{k}"] = v
         return ServeResult(stats=stats, requests=list(eng.finished),
                            engine=eng)
 
     def serve_async(self, engine_cfg: Optional[EngineConfig] = None,
                     gen: Optional[GenerationConfig] = None, *,
                     draft: Optional["LVLM"] = None,
-                    admission=None, metrics=None,
+                    admission=None, metrics=None, compressors=None,
                     pacing: str = "virtual", pacing_scale: float = 1.0,
                     disconnect_timeout_s: Optional[float] = None
                     ) -> AsyncLVLMServer:
@@ -314,15 +340,16 @@ class LVLM:
         """
         return AsyncLVLMServer(self, engine_cfg=engine_cfg, gen=gen,
                                draft=draft, admission=admission,
-                               metrics=metrics, pacing=pacing,
-                               pacing_scale=pacing_scale,
+                               metrics=metrics, compressors=compressors,
+                               pacing=pacing, pacing_scale=pacing_scale,
                                disconnect_timeout_s=disconnect_timeout_s)
 
     def serve_cluster(self, replicas=2,
                       engine_cfg: Optional[EngineConfig] = None,
                       gen: Optional[GenerationConfig] = None, *,
                       routing="round_robin", draft: Optional["LVLM"] = None,
-                      admission=None, pacing: str = "virtual",
+                      admission=None, compressors=None,
+                      pacing: str = "virtual",
                       pacing_scale: float = 1.0,
                       disconnect_timeout_s: Optional[float] = None
                       ) -> "Router":
@@ -360,7 +387,8 @@ class LVLM:
                 raise ValueError("serve_cluster needs at least one replica")
         servers = []
         for spec in specs:
-            unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission"}
+            unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission",
+                                   "compressors"}
             if unknown:
                 raise ValueError(f"unknown replica spec keys: {unknown}")
             servers.append(self.serve_async(
@@ -368,6 +396,7 @@ class LVLM:
                 spec.get("gen", gen),
                 draft=spec.get("draft", draft),
                 admission=spec.get("admission", admission),
+                compressors=spec.get("compressors", compressors),
                 pacing=pacing, pacing_scale=pacing_scale,
                 disconnect_timeout_s=disconnect_timeout_s))
         return Router(servers, routing=routing)

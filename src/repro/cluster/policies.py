@@ -66,7 +66,11 @@ class PrefixAffinityPolicy:
     def pick(self, request, candidates: List):
         best, best_len = None, 0
         for rep in candidates:
-            n = rep.cached_prefix_len(request.tokens)
+            # prefix entries are keyed by compression variant too: a
+            # replica only counts as warm if it cached the prefix under
+            # THIS request's strategy
+            n = rep.cached_prefix_len(request.tokens,
+                                      getattr(request, "compression", None))
             if n > best_len:
                 best, best_len = rep, n
         if best is not None:

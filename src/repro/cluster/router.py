@@ -85,14 +85,17 @@ class Replica:
     def prefix_block(self) -> int:
         return self.server.engine.ec.prefix_block
 
-    def cached_prefix_len(self, tokens: Sequence[int]) -> int:
+    def cached_prefix_len(self, tokens: Sequence[int],
+                          compression: Optional[str] = None) -> int:
         """Longest block-aligned prefix of ``tokens`` this replica's
-        engine caches. Pure probe (``touch=False``): no LRU refresh --
-        only a real prefill hit should touch recency."""
+        engine caches UNDER the request's compression variant (None ->
+        the replica's default strategy). Pure probe (``touch=False``): no
+        LRU refresh -- only a real prefill hit should touch recency."""
         eng = self.server.engine
         if not eng.ec.prefix_cache:
             return 0
-        k, _hit = eng._prefix_lookup([int(x) for x in tokens], touch=False)
+        k, _hit = eng._prefix_lookup([int(x) for x in tokens], touch=False,
+                                     variant=compression)
         return k
 
 
@@ -298,7 +301,10 @@ def _reset_for_retry(req: Request) -> None:
     req.first_token_time = None
     req.finish_time = None
     req.served_tokens = 0
+    # the sibling re-resolves the compression strategy (its registry /
+    # default may differ), so the stamped post-compression count resets
+    req.nv_compressed = None
     for attr in ("_slot", "_ve", "_prefix_pin", "_needs_ttft",
-                 "_gate_clock"):
+                 "_gate_clock", "_comp_name"):
         if hasattr(req, attr):
             delattr(req, attr)

@@ -5,6 +5,12 @@ repeated images -- visual tokens hash to ids too) to physical KV blocks.
 LRU eviction respects reference counts so actively-used entries survive
 continuous batching (SGLang's design); ``match_prefix`` returns the longest
 cached prefix and pins its blocks.
+
+Entries are NAMESPACED by compression ``variant`` (one radix tree per
+variant): KV blocks written under one visual-token-compression strategy
+are not interchangeable with another's, so a ``fastv-0.5`` prefill must
+never serve a ``none`` lookup -- same rule the serving engine's host
+prefix map applies.
 """
 from __future__ import annotations
 
@@ -31,15 +37,29 @@ class RadixNode:
 
 
 class RadixPrefixCache:
+    #: variant key used when callers do not namespace (back-compat)
+    DEFAULT_VARIANT = "none"
+
     def __init__(self, allocator: BlockAllocator,
                  block_size: Optional[int] = None):
         self.alloc = allocator
         self.block_size = block_size or allocator.block_size
-        self.root = RadixNode((), [], {}, None)
+        # one radix tree per compression variant; ``root`` stays the
+        # default-variant tree for existing callers
+        self.roots: Dict[str, RadixNode] = {}
+        self.root = self._variant_root(self.DEFAULT_VARIANT)
         self.hits = 0
         self.misses = 0
         self.hit_tokens = 0
         self.total_tokens = 0
+
+    def _variant_root(self, variant: Optional[str]) -> RadixNode:
+        v = variant if variant is not None else self.DEFAULT_VARIANT
+        node = self.roots.get(v)
+        if node is None:
+            node = RadixNode((), [], {}, None)
+            self.roots[v] = node
+        return node
 
     def _split_edge(self, parent: RadixNode, child: RadixNode,
                     split: int) -> RadixNode:
@@ -58,15 +78,17 @@ class RadixPrefixCache:
         return upper
 
     # ------------------------------------------------------------- match --
-    def match_prefix(self, tokens: Sequence[int]
+    def match_prefix(self, tokens: Sequence[int],
+                     variant: Optional[str] = None
                      ) -> Tuple[List[int], int, List[RadixNode]]:
-        """Longest cached prefix of ``tokens``.
+        """Longest cached prefix of ``tokens`` under compression
+        ``variant`` (None -> the default namespace).
 
         Returns (block_ids, matched_token_count, pinned_nodes). Caller must
         ``unpin`` the nodes when the request finishes. Only whole-block
         multiples are reusable (partial blocks would need copy-on-write).
         """
-        node = self.root
+        node = self._variant_root(variant)
         matched: List[int] = []
         pinned: List[RadixNode] = []
         i = 0
@@ -112,15 +134,16 @@ class RadixPrefixCache:
 
     # ------------------------------------------------------------ insert --
     def insert(self, tokens: Sequence[int], block_ids: Sequence[int],
-               block_size: int) -> None:
-        """Register a computed prefix; takes shared ownership of blocks."""
+               block_size: int, variant: Optional[str] = None) -> None:
+        """Register a computed prefix under compression ``variant``;
+        takes shared ownership of blocks."""
         tokens = tuple(tokens)
         usable = (len(tokens) // block_size) * block_size
         tokens = tokens[:usable]
         block_ids = list(block_ids[:usable // block_size])
         if not tokens:
             return
-        node = self.root
+        node = self._variant_root(variant)
         i = 0
         bi = 0
         while i < len(tokens):
@@ -153,11 +176,13 @@ class RadixPrefixCache:
 
     # ------------------------------------------------------------- evict --
     def evict(self, num_blocks: int) -> int:
-        """LRU-evict leaf nodes (ref==0) until ``num_blocks`` are released."""
+        """LRU-evict leaf nodes (ref==0, any variant) until ``num_blocks``
+        are released."""
         released = 0
         while released < num_blocks:
             leaves = [n for n in self._iter_nodes()
-                      if not n.children and n.ref == 0 and n is not self.root]
+                      if not n.children and n.ref == 0
+                      and n.parent is not None]
             if not leaves:
                 break
             victim = min(leaves, key=lambda n: n.last_access)
@@ -169,7 +194,7 @@ class RadixPrefixCache:
         return released
 
     def _iter_nodes(self):
-        stack = [self.root]
+        stack = list(self.roots.values())
         while stack:
             n = stack.pop()
             yield n
@@ -178,7 +203,7 @@ class RadixPrefixCache:
     def stats(self) -> Dict:
         nodes = list(self._iter_nodes())
         return {
-            "nodes": len(nodes) - 1,
+            "nodes": len(nodes) - len(self.roots),
             "cached_blocks": sum(len(n.block_ids) for n in nodes),
             "hit_rate": self.hits / max(1, self.hits + self.misses),
             "token_hit_rate": self.hit_tokens / max(1, self.total_tokens),

@@ -4,8 +4,13 @@ One ``Engine`` drives a REAL jitted model (fixed-shape slot pool, the XLA
 analogue of vLLM's preallocated physical blocks) under any scheduler from
 scheduler.py, with the taxonomy dimensions as config switches:
 
-  dim 1  visual token compression  -- CompressionConfig.token_pruner/merger
-         applied to each request's visual embeddings before prefill.
+  dim 1  visual token compression  -- pluggable ``CompressionStrategy``
+         objects applied to each request's visual embeddings before
+         prefill. Like decoders, compression is PER-REQUEST: the engine
+         keeps a compressor registry (``Engine(compressors=...)``), each
+         request may name its own strategy (``Request.compression``), and
+         KV accounting / admission / prefix-cache keys all use the
+         POST-compression token counts of the resolved strategy.
   dim 2a KV selection              -- post-prefill cache compaction with
          position-exact masking (slot_pos caches); attention-free selectors
          (l2 / streaming) run live in the engine; attention-score selectors
@@ -52,7 +57,8 @@ from repro.core.kv_cache.selection import SELECTORS
 from repro.core.serving.disaggregation import CostModel
 from repro.core.serving.request import Request, State, summarize
 from repro.core.serving.scheduler import SCHEDULERS
-from repro.core.token_compression.policy import compress_visual_tokens
+from repro.core.token_compression.policy import (CompressionStrategy,
+                                                 LIVE_KV_SELECTORS)
 
 
 @dataclasses.dataclass
@@ -81,6 +87,10 @@ class EngineConfig:
     #   Engine(..., decoders={name: inst}) registers named strategies)
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
+    #   DEFAULT compression config for the internal layer; the facade now
+    #   passes a CompressionStrategy object instead (Engine(compressor=))
+    #   and leaves this at its default. Any request may override the
+    #   strategy per-request via ``Request.compression``.
     prefix_cache: bool = False
     prefix_block: int = 16               # reuse granularity (tokens)
     prefix_cap: int = 64                 # max cached prefixes (LRU-evicted)
@@ -149,6 +159,13 @@ def _make_default_decoder(name: str):
     return make_decoder(name)
 
 
+def _make_compressor(name: str):
+    # preset/parametric names ("fastv-0.5", "streaming-kv-64") resolve
+    # one layer up; lazy for the same importability reason as decoders
+    from repro.api.compressors import make_compressor
+    return make_compressor(name)
+
+
 def _slot_get(pool, slot):
     """Slice one slot's cache out of the pool as a batch-1 cache."""
     return jax.tree.map(lambda a: a[:, slot:slot + 1], pool)
@@ -160,12 +177,18 @@ def _slot_set(pool, slot, one):
 
 class Engine:
     def __init__(self, model, params, ec: EngineConfig, *, decoder=None,
-                 decoders: Optional[Dict] = None):
+                 decoders: Optional[Dict] = None, compressor=None,
+                 compressors: Optional[Dict] = None):
         cfg = model.cfg
         self.ec = ec
         self.params = params
-        compacting = (ec.compression.kv_selector in ("l2", "streaming")
-                      and ec.compression.kv_budget > 0)
+        # default compression strategy: an explicit strategy object wins;
+        # otherwise wrap EngineConfig.compression (internal-layer path)
+        self.compressor = compressor if compressor is not None \
+            else CompressionStrategy(ec.compression)
+        cc0 = getattr(self.compressor, "cc", ec.compression)
+        compacting = (cc0.kv_selector in LIVE_KV_SELECTORS
+                      and cc0.kv_budget > 0)
         if compacting and cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("KV compaction needs an attention-cache family")
         if compacting and cfg.use_mla:
@@ -212,12 +235,15 @@ class Engine:
         # cumulative decode-phase virtual-clock cost per strategy group
         # (prefill cost is request-, not strategy-, attributed)
         self.group_costs: Dict[str, float] = {}
-        # prefix cache: host map, longest block-aligned prefix match,
-        # true-LRU eviction (lookup hits move-to-end; see _prefix_lookup)
-        self._prefix: "OrderedDict[Tuple[int, ...], Tuple]" = OrderedDict()
-        # in-flight pin counts: entries a live request hit stay resident
-        # (LRU eviction skips them); released at retire/abort
-        self._prefix_pins: Dict[Tuple[int, ...], int] = {}
+        # prefix cache: host map keyed by (compression variant, tokens) --
+        # a prefill is only reusable under the SAME variant -- longest
+        # block-aligned prefix match, true-LRU eviction (lookup hits
+        # move-to-end; see _prefix_lookup)
+        self._prefix: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        # in-flight pin counts, keyed like _prefix by (variant, tokens):
+        # entries a live request hit stay resident (LRU eviction skips
+        # them); released at retire/abort
+        self._prefix_pins: Dict[Tuple[str, Tuple[int, ...]], int] = {}
         self.prefix_hit_tokens = 0
         self.prefix_total_tokens = 0
 
@@ -244,6 +270,20 @@ class Engine:
         # request count toward decoder_stats()'s flat-vs-prefixed choice
         self._used_decoders: set = set()
         self._validate_decoder(self._default_name, self.decoder)
+
+        # compressor registry: the default strategy plus named per-request
+        # strategies; unknown names resolve lazily via repro.api (preset /
+        # parametric grammar), validated on first use like decoders
+        self._compressors: Dict[str, object] = {}
+        if compressors:
+            self._compressors.update(compressors)
+        self._default_comp_name = getattr(self.compressor, "name", "none")
+        self._compressors[self._default_comp_name] = self.compressor
+        self._validated_comps: set = set()
+        # per-strategy visual-token counters: name -> [in, out] (the
+        # prefill-token-reduction signal compression_stats() reports)
+        self._comp_counts: Dict[str, List[int]] = {}
+        self._validate_compressor(self._default_comp_name, self.compressor)
 
     # ----------------------------------------------------------- decoders --
     def _validate_decoder(self, name: str, dec) -> None:
@@ -280,16 +320,66 @@ class Engine:
                 out[f"{n}/{k}"] = v
         return out
 
+    # -------------------------------------------------------- compressors --
+    def _validate_compressor(self, name: str, comp) -> None:
+        if name in self._validated_comps:
+            return
+        validate = getattr(comp, "validate", None)
+        if validate is not None:
+            validate(self)
+        self._validated_comps.add(name)
+
+    def _resolve_compressor(self, name: Optional[str]) -> Tuple[str, object]:
+        """Per-request compression resolution: None -> the engine default;
+        otherwise a registered strategy or any preset/parametric name
+        (resolved lazily, mirror of ``_resolve_decoder``)."""
+        if name is None:
+            return self._default_comp_name, self.compressor
+        comp = self._compressors.get(name)
+        if comp is None:
+            comp = _make_compressor(name)
+            self._compressors[name] = comp
+        self._validate_compressor(name, comp)
+        return name, comp
+
+    def _stamp_compressed_nv(self, req: Request) -> None:
+        """Resolve the request's strategy and stamp its POST-compression
+        visual count (idempotent; the basis of all KV accounting)."""
+        if req.nv_compressed is not None or req.visual_embeds is None:
+            return
+        _, comp = self._resolve_compressor(req.compression)
+        req.nv_compressed = int(
+            comp.compressed_token_count(len(req.visual_embeds)))
+
+    def compression_stats(self) -> Dict[str, Dict]:
+        """Per-strategy visual-token reduction of every strategy that
+        compressed a request's prefill: ``{name: {visual_tokens_in,
+        visual_tokens_out, prefill_token_reduction}}``."""
+        out: Dict[str, Dict] = {}
+        for name, (vin, vout) in self._comp_counts.items():
+            out[name] = {
+                "visual_tokens_in": vin,
+                "visual_tokens_out": vout,
+                "prefill_token_reduction":
+                    (1.0 - vout / vin) if vin else 0.0,
+            }
+        return out
+
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
         name, dec = self._resolve_decoder(req.decoder)
         self._used_decoders.add(name)
+        cname, _comp = self._resolve_compressor(req.compression)
+        req._comp_name = cname
+        self._stamp_compressed_nv(req)
         # speculative slots verify up to gamma positions past the committed
         # stream: reserve that slack so block writes stay clear of the
         # scratch position (and schedulers account it as KV footprint)
         req.lookahead = max(req.lookahead,
                             int(getattr(dec, "lookahead_tokens", 0)))
-        need = req.prompt_len + req.max_new_tokens + req.lookahead
+        # capacity is checked against what actually lands in the cache:
+        # the POST-compression prompt length
+        need = req.kv_prompt_len + req.max_new_tokens + req.lookahead
         if need > self.ec.cache_len - 1:
             raise ValueError(
                 f"request {req.rid} needs {need} tokens"
@@ -313,14 +403,17 @@ class Engine:
 
     def kv_request_tokens(self, req: Request) -> int:
         """Block-rounded KV reservation one request commits the pool to:
-        prompt + max_new + decode lookahead (speculative gamma resolves via
-        the request's strategy even before submit)."""
+        POST-compression prompt + max_new + decode lookahead (speculative
+        gamma AND the compression strategy resolve via the request even
+        before submit, so admission watermarks and ``least_kv`` routing
+        never over-reserve for tokens the pruner will drop)."""
         la = req.lookahead
         if req.decoder is not None or la == 0:
             _, dec = self._resolve_decoder(req.decoder)
             la = max(la, int(getattr(dec, "lookahead_tokens", 0)))
+        self._stamp_compressed_nv(req)
         bs = self._kv_block()
-        need = req.prompt_len + req.max_new_tokens + la
+        need = req.kv_prompt_len + req.max_new_tokens + la
         return ((need + bs - 1) // bs) * bs
 
     def kv_committed_tokens(self, include_waiting: bool = True) -> int:
@@ -371,9 +464,18 @@ class Engine:
         return False
 
     # ------------------------------------------------------------- prefix --
-    def _prefix_lookup(self, tokens: List[int], touch: bool = True
+    def _prefix_variant(self, name: Optional[str]) -> str:
+        """Compression-variant component of every prefix-cache key: the
+        request's strategy name (None -> the engine default). A cached
+        prefill is only reusable under the SAME compression variant -- a
+        ``fastv-0.5`` prefill must never serve a ``none`` lookup."""
+        return name if name is not None else self._default_comp_name
+
+    def _prefix_lookup(self, tokens: List[int], touch: bool = True,
+                       variant: Optional[str] = None
                        ) -> Tuple[int, Optional[Tuple]]:
-        """Longest block-aligned cached prefix of ``tokens``.
+        """Longest block-aligned cached prefix of ``tokens`` under the
+        given compression ``variant``.
 
         Inserted keys are always multiples of ``prefix_block``, so probing
         descending block-aligned lengths is exact and O(len/block) probes
@@ -382,21 +484,23 @@ class Engine:
         probe routing layers use (cluster prefix-affinity), where only a
         real prefill hit should refresh recency."""
         bs = self.ec.prefix_block
+        v = self._prefix_variant(variant)
         t = tuple(tokens)
         for k in range((len(t) // bs) * bs, 0, -bs):
-            hit = self._prefix.get(t[:k])
+            hit = self._prefix.get((v, t[:k]))
             if hit is not None:
                 if touch:
-                    self._prefix.move_to_end(t[:k])
+                    self._prefix.move_to_end((v, t[:k]))
                 return k, hit
         return 0, None
 
-    def _prefix_insert(self, tokens: List[int], slot: int, length: int):
+    def _prefix_insert(self, tokens: List[int], slot: int, length: int,
+                       variant: Optional[str] = None):
         bs = self.ec.prefix_block
         k = (min(length, len(tokens)) // bs) * bs
         if k == 0:
             return
-        key = tuple(tokens[:k])
+        key = (self._prefix_variant(variant), tuple(tokens[:k]))
         if key in self._prefix:
             self._prefix.move_to_end(key)            # re-insert = LRU touch
             return
@@ -425,22 +529,47 @@ class Engine:
                 return i
         raise RuntimeError("no free slot (scheduler overcommitted)")
 
+    def _prompt_query_embeds(self, req: Request):
+        """Text-prompt embeddings [1, Q, d] for cross-modal pruners
+        (sparsevlm / cdpruner rank visual tokens by instruction
+        relevance). The prompt IS known at prefill time, so the engine
+        threads it instead of the old silent ``query=None`` degradation
+        to query-free behavior."""
+        if not req.tokens or not isinstance(self.params, dict) \
+                or "embed" not in self.params:
+            return None
+        from repro.models.layers import embed_tokens
+        return embed_tokens(self.params["embed"],
+                            jnp.asarray([req.tokens], jnp.int32))
+
     def _do_prefill_chunk(self, req: Request, n: int) -> None:
         ec = self.ec
         n = min(n, len(req.tokens) - req.prefill_done)
         if n <= 0:
             return
+        comp_name = getattr(req, "_comp_name", None) \
+            or self._default_comp_name
         if req.prefill_done == 0:
             slot = self._free_slot()
             req._slot = slot
             self.slot_req[slot] = req
-            # dim 1: compress visual tokens before they enter the backbone
+            # dim 1: the request's compression strategy runs before the
+            # visual tokens enter the backbone
             ve = req.visual_embeds
-            if ve is not None and (ec.compression.token_pruner != "none"
-                                   or ec.compression.token_merger != "none"):
-                ve_j, _, _ = compress_visual_tokens(
-                    ec.compression, jnp.asarray(ve)[None], query=None)
-                ve = np.asarray(ve_j[0])
+            if ve is not None:
+                _, comp = self._resolve_compressor(req.compression)
+                nv_in = len(ve)
+                if getattr(comp, "encoder_active", True):
+                    # the query embed is only built for strategies that
+                    # consume it (custom strategies default to yes)
+                    q = self._prompt_query_embeds(req) \
+                        if getattr(comp, "needs_query", True) else None
+                    ve_j, _, _ = comp.compress_prefill(
+                        jnp.asarray(ve)[None], query=q)
+                    ve = np.asarray(ve_j[0])
+                cnt = self._comp_counts.setdefault(comp_name, [0, 0])
+                cnt[0] += nv_in
+                cnt[1] += len(ve)
             req._ve = ve
             self.slot_nv[slot] = 0 if ve is None else len(ve)
             # visual tokens are prefill work too (the dim-1 latency claim)
@@ -450,15 +579,17 @@ class Engine:
         start, end = req.prefill_done, req.prefill_done + n
 
         if req.prefill_done == 0:
-            # dim 2b: prefix reuse (text-token prompts)
+            # dim 2b: prefix reuse (text-token prompts), keyed by the
+            # request's compression variant
             use, hit = 0, None
             if ec.prefix_cache and req._ve is None:
-                hit_k, hit = self._prefix_lookup(req.tokens)
+                hit_k, hit = self._prefix_lookup(req.tokens,
+                                                 variant=comp_name)
                 self.prefix_total_tokens += len(req.tokens)
                 # always recompute >=1 token so we have last-position logits
                 use = min(hit_k, len(req.tokens) - 1, end - 1)
             if hit is not None and use > 0:
-                key = tuple(req.tokens[:hit_k])
+                key = (comp_name, tuple(req.tokens[:hit_k]))
                 self._prefix_pins[key] = self._prefix_pins.get(key, 0) + 1
                 req._prefix_pin = key
                 snap, _k = hit
@@ -489,9 +620,18 @@ class Engine:
         if req.prefill_done >= len(req.tokens):
             # prompt complete: first token comes from the last logits
             if ec.prefix_cache and req._ve is None:
-                self._prefix_insert(req.tokens, slot, end)
-            if self.compacting and ec.compression.kv_budget:
-                self._compact_slot(slot)
+                self._prefix_insert(req.tokens, slot, end,
+                                    variant=comp_name)
+            if self.compacting:
+                # dim 2a: KV-side hook of the request's strategy -- on a
+                # compacting (windowed) engine each request compacts to
+                # its OWN budget; strategies without one skip compaction
+                _, comp = self._resolve_compressor(req.compression)
+                budget = getattr(comp, "decode_budget", lambda: None)()
+                if budget:
+                    self._compact_slot(
+                        slot, getattr(comp, "kv_selector", "streaming"),
+                        budget)
             self.key, k1 = jax.random.split(self.key)
             _, dec = self._resolve_decoder(req.decoder)
             temp = 0.0 if getattr(dec, "greedy", False) else ec.temperature
@@ -507,8 +647,9 @@ class Engine:
             self.running.append(req)
 
     # ------------------------------------------------------ KV compaction --
-    def _compact_slot(self, slot: int) -> None:
-        """dim 2a: evict down to kv_budget with exact position bookkeeping.
+    def _compact_slot(self, slot: int, selector: str, budget: int) -> None:
+        """dim 2a: evict down to ``budget`` with exact position bookkeeping
+        (selector/budget come from the REQUEST's compression strategy).
 
         Retained entries keep their ORIGINAL positions in ``slot_pos`` (the
         RoPE-consistency requirement the survey's §V flags); evicted slots
@@ -516,12 +657,10 @@ class Engine:
         paged pool's job) -- what the engine proves is output fidelity under
         the eviction policy.
         """
-        cc = self.ec.compression
-        budget = cc.kv_budget
         pos_end = int(self.slot_pos[slot])
         if pos_end <= budget:
             return
-        sel = SELECTORS[cc.kv_selector]
+        sel = SELECTORS[selector]
         lc = self.pool["layers"]
         k = lc["k"][:, slot, :pos_end]            # [L, S, H, D]
         v = lc["v"][:, slot, :pos_end]

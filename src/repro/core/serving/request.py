@@ -36,6 +36,13 @@ class Request:
     # The engine groups decode-phase slots by strategy each iteration, so
     # one Engine serves a mixed-strategy workload.
     decoder: Optional[str] = None
+    # per-request visual-token compression strategy (survey dim 1/2a):
+    # None -> the engine's default; otherwise a registered strategy name
+    # or any preset/parametric name ("fastv-0.5", "framefusion-0.25",
+    # "streaming-kv-64", ...) -- resolved exactly like ``decoder``, so a
+    # video request can run aggressive pruning next to an uncompressed
+    # chat request in the same batch.
+    compression: Optional[str] = None
     # extra KV positions reserved beyond prompt+max_new (set by the engine
     # at submit: speculative verify writes up to ``gamma`` draft positions
     # ahead of the committed stream, so its slots need gamma slack).
@@ -44,6 +51,11 @@ class Request:
 
     # runtime state ---------------------------------------------------------
     state: State = State.WAITING
+    # POST-compression visual-token count, stamped by the engine when the
+    # request's compression strategy is first resolved (submit or the
+    # admission gate's kv_request_tokens probe). None until then; KV
+    # accounting falls back to the full visual count.
+    nv_compressed: Optional[int] = None
     prefill_done: int = 0                   # tokens of prompt processed
     generated: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
@@ -62,6 +74,20 @@ class Request:
     @property
     def total_len(self) -> int:
         return self.prompt_len + len(self.generated)
+
+    @property
+    def kv_prompt_len(self) -> int:
+        """Prompt tokens that actually LAND in the KV cache: text plus the
+        POST-compression visual count once the engine resolved the
+        request's compression strategy (``prompt_len`` keeps the full
+        pre-compression count for workload/latency reporting)."""
+        if self.nv_compressed is None:
+            return self.prompt_len
+        return len(self.tokens) + self.nv_compressed
+
+    @property
+    def kv_total_len(self) -> int:
+        return self.kv_prompt_len + len(self.generated)
 
     def is_finished(self) -> bool:
         return len(self.generated) >= self.max_new_tokens

@@ -72,9 +72,12 @@ class ContinuousBatcher:
         # ``lookahead`` reserves the speculative draft/verify slack: those
         # slots write up to gamma positions past the committed stream, so
         # capacity accounting must include it or admission overcommits.
+        # ``kv_total_len`` counts POST-compression visual tokens -- what
+        # the pool actually holds -- so compressed requests free real
+        # admission headroom instead of reserving for pruned tokens.
         bs = self.block_size
-        return sum(((r.total_len + r.max_new_tokens + r.lookahead + bs - 1)
-                    // bs) * bs
+        return sum(((r.kv_total_len + r.max_new_tokens + r.lookahead
+                     + bs - 1) // bs) * bs
                    for r in running)
 
     def plan(self, waiting: List[Request], running: List[Request]
@@ -85,7 +88,7 @@ class ContinuousBatcher:
         for r in list(waiting):
             if len(running) + len(prefill) >= self.max_batch:
                 break
-            need = ((r.prompt_len + r.max_new_tokens + r.lookahead
+            need = ((r.kv_prompt_len + r.max_new_tokens + r.lookahead
                      + self.block_size - 1)
                     // self.block_size) * self.block_size
             if used + need > self.kv_capacity:

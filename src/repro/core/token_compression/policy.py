@@ -1,7 +1,35 @@
 """Compression policy: maps CompressionConfig -> a callable applied to the
 visual token stream before (encoder-side) or inside (decoder-side) the
-backbone. This is the single integration point the serving engine and the
-examples use."""
+backbone.
+
+Two layers live here:
+
+  * ``compress_visual_tokens`` -- the stateless library entry point over
+    the pruners/mergers (what the examples and the standalone drivers use).
+  * ``CompressionStrategy``    -- the FIRST-CLASS strategy object the
+    serving engine dispatches per request (the dim-1/2a mirror of the
+    decoder hook): every request may carry its own strategy
+    (``Request.compression``), resolved against the engine's compressor
+    registry exactly like ``Request.decoder``.
+
+Strategy protocol (duck-typed; ``CompressionStrategy`` is the config-backed
+reference implementation):
+
+    name                        -- registry key (``Request.compression``)
+    encoder_active              -- bool: run ``compress_prefill`` at all?
+    compress_prefill(embeds, *, query=None, scores=None)
+                                -- encoder-side hook, [B,N,d] ->
+                                   (compressed, kept_idx | None, info)
+    compressed_token_count(n)   -- EXACT post-compression count for n
+                                   visual tokens (KV accounting: admission
+                                   watermarks / ``kv_request_tokens`` must
+                                   never run the pruner to size a request)
+    decode_budget()             -- optional KV-side hook: tokens to compact
+                                   each slot to after prefill (None = no
+                                   live KV compaction)
+    kv_selector                 -- selector name for ``decode_budget``
+    validate(engine)            -- optional, run on first use
+"""
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
@@ -11,6 +39,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import CompressionConfig
 from repro.core.token_compression import merging, pruning
+
+#: selectors the engine can run live post-prefill (attention-free;
+#: attention-score selectors stay library-level -- survey §V)
+LIVE_KV_SELECTORS = ("l2", "streaming")
 
 
 def compress_visual_tokens(cc: CompressionConfig, embeds, *,
@@ -57,3 +89,109 @@ def fastv_scores_from_attention(attn_probs, visual_slice) -> jax.Array:
     """
     start, stop = visual_slice
     return attn_probs[..., start:stop].mean(axis=(1, 2))
+
+
+def compressed_token_count(cc: CompressionConfig, n: int) -> int:
+    """EXACT number of tokens ``compress_visual_tokens(cc, [*, n, d])``
+    returns, computed shape-only.
+
+    KV accounting (admission watermarks, ``Engine.kv_request_tokens``,
+    ``least_kv`` routing) sizes requests with this instead of the FULL
+    visual count, so compressed requests stop over-reserving pool tokens
+    -- and it must never have to run the pruner to know the answer.
+    """
+    keep = max(1, int(round(n * cc.keep_ratio)))
+    if cc.keep_ratio >= 1.0 and cc.token_merger == "none":
+        return n
+    if cc.token_merger == "tome":
+        # mirror merging.tome_to_count's capped-r loop (max_r_ratio=0.4)
+        m = n
+        while m > keep:
+            m -= min(m - keep, max(1, int((m // 2) * 0.4)))
+        return m
+    if cc.token_merger == "framefusion":
+        return keep
+    if cc.token_pruner == "none":
+        return n
+    return keep
+
+
+def _derive_name(cc: CompressionConfig) -> str:
+    """Canonical strategy name for a config -- matches the parametric
+    preset grammar (``repro.api.generation.resolve_compression``), so a
+    default built from ``EngineConfig.compression`` and a per-request
+    name like ``"fastv-0.5"`` resolve to the SAME registry entry."""
+    if cc.token_pruner != "none":
+        return f"{cc.token_pruner}-{cc.keep_ratio:g}"
+    if cc.token_merger != "none":
+        return f"{cc.token_merger}-{cc.keep_ratio:g}"
+    if cc.kv_selector in LIVE_KV_SELECTORS and cc.kv_budget > 0:
+        return f"{cc.kv_selector}-kv-{cc.kv_budget}"
+    return "none"
+
+
+class CompressionStrategy:
+    """Config-backed compression strategy (see the module docstring for
+    the protocol). Wraps the existing pruners/mergers behind the engine's
+    per-request dispatch; richer strategies (learned budgets, per-layer
+    schedules) duck-type the same surface."""
+
+    def __init__(self, cc: Optional[CompressionConfig] = None,
+                 name: Optional[str] = None):
+        self.cc = cc if cc is not None else CompressionConfig()
+        self.name = name if name is not None else _derive_name(self.cc)
+
+    def __repr__(self) -> str:
+        return f"CompressionStrategy({self.name!r})"
+
+    # -------------------------------------------------- encoder side --
+    @property
+    def encoder_active(self) -> bool:
+        """Whether ``compress_prefill`` does anything (the engine skips
+        the hook entirely for KV-only / no-op strategies)."""
+        return (self.cc.token_pruner != "none"
+                or self.cc.token_merger != "none")
+
+    @property
+    def needs_query(self) -> bool:
+        """Whether ``compress_prefill`` consumes the text ``query``
+        embeddings -- only the cross-modal pruners do; the engine skips
+        building the query for everything else (prefill hot path)."""
+        return self.cc.token_pruner in ("sparsevlm", "cdpruner")
+
+    def compress_prefill(self, embeds, *, query=None, scores=None
+                         ) -> Tuple[jax.Array, Optional[jax.Array], Dict]:
+        """Encoder-side hook: compress [B, N, d] visual embeddings before
+        they enter the backbone. ``query`` [B, Q, d] carries the TEXT
+        prompt embeddings so cross-modal pruners (sparsevlm / cdpruner)
+        rank by instruction relevance."""
+        return compress_visual_tokens(self.cc, embeds, query=query,
+                                      scores=scores)
+
+    def compressed_token_count(self, n: int) -> int:
+        return compressed_token_count(self.cc, n)
+
+    # ------------------------------------------------------- KV side --
+    @property
+    def kv_selector(self) -> str:
+        return self.cc.kv_selector
+
+    def decode_budget(self) -> Optional[int]:
+        """KV-side hook: live post-prefill compaction budget (tokens per
+        slot), or None when this strategy does not compact."""
+        if self.cc.kv_selector in LIVE_KV_SELECTORS and self.cc.kv_budget:
+            return self.cc.kv_budget
+        return None
+
+    def validate(self, eng) -> None:
+        """First-use check against the engine (mirrors decoder
+        validation): live KV compaction needs the windowed, position-exact
+        cache the engine only builds when its DEFAULT strategy compacts --
+        per-request overrides cannot retrofit it."""
+        if self.decode_budget() is not None \
+                and not getattr(eng, "compacting", False):
+            raise ValueError(
+                f"compression strategy {self.name!r} needs live KV "
+                "compaction, but the engine was not built compacting; "
+                "set the engine DEFAULT (EngineConfig.compression or the "
+                "facade's GenerationConfig.compression) to a kv preset")

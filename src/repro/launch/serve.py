@@ -4,6 +4,11 @@ through the unified ``repro.api`` facade.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b --smoke \
         --requests 16 --scheduler chunked --compression divprune-0.5
 
+    # per-request compression mixing (one engine, two strategies; the
+    # report includes per-strategy prefill token reduction):
+    PYTHONPATH=src python -m repro.launch.serve \
+        --compression none,framefusion-0.25
+
     # decoder strategies (all batched; speculative slots share each
     # jitted draft/verify round):
     PYTHONPATH=src python -m repro.launch.serve --decoder speculative
@@ -70,7 +75,10 @@ def main() -> int:
     ap.add_argument("--compression", default="none",
                     help="preset name, e.g. none|fastv-0.5|divprune-0.5|"
                          "streaming-kv; parametric: <pruner>-<keep> or "
-                         "<streaming|l2>-kv-<budget>")
+                         "<streaming|l2>-kv-<budget>. A comma list "
+                         "(e.g. 'none,fastv-0.5') assigns strategies "
+                         "PER-REQUEST round-robin -- one engine serves "
+                         "the mixed-compression workload")
     ap.add_argument("--gamma", type=int, default=4,
                     help="speculative draft length")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -114,18 +122,27 @@ def main() -> int:
             env=dict(os.environ, PYTHONPATH="src"))
 
     lvlm = LVLM.from_pretrained(args.arch, smoke=True)
+    # comma list = per-request mixing: the FIRST preset is the engine
+    # default, the rest resolve per-request against the same registry
+    # (compression is configured via the facade, never by mutating
+    # EngineConfig.compression -- see the repo layering rule)
+    presets = [p for p in str(args.compression).split(",") if p]
+    for p in presets:
+        resolve_compression(p)             # fail fast on bad names
     ec = EngineConfig(
         max_batch=args.max_batch, cache_len=args.cache_len,
         scheduler=args.scheduler, temperature=args.temperature,
-        prefix_cache=args.prefix_cache,
-        compression=resolve_compression(args.compression))
+        prefix_cache=args.prefix_cache)
     gen = GenerationConfig(
         decoder=args.decoder, temperature=args.temperature,
         max_new_tokens=args.new_tokens, gamma=args.gamma,
-        compression=args.compression)
+        compression=presets[0] if presets else "none")
     reqs = synth_requests(lvlm.cfg, args.requests,
                           new_tokens=args.new_tokens,
                           shared_prefix=args.shared_prefix)
+    if len(presets) > 1:
+        for i, r in enumerate(reqs):
+            r.compression = presets[i % len(presets)]
     if args.open_loop > 0:
         rng = np.random.RandomState(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.open_loop,

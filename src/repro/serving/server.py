@@ -128,11 +128,13 @@ class AsyncLVLMServer:
     def __init__(self, lvlm, *, engine_cfg=None, gen=None, draft=None,
                  admission: Optional[AdmissionConfig] = None,
                  metrics: Optional[MetricsRegistry] = None,
+                 compressors: Optional[Dict] = None,
                  pacing: str = "virtual", pacing_scale: float = 1.0,
                  disconnect_timeout_s: Optional[float] = None):
         if pacing not in ("virtual", "wall"):
             raise ValueError("pacing must be 'virtual' or 'wall'")
-        self.engine = lvlm._serve_engine(engine_cfg, gen, draft)
+        self.engine = lvlm._serve_engine(engine_cfg, gen, draft,
+                                         compressors=compressors)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.admission = AdmissionController(
             admission if admission is not None else AdmissionConfig(),
@@ -349,4 +351,9 @@ class AsyncLVLMServer:
         out.update({f"decoder_stats/{k}": v
                     for k, v in self.engine.decoder_stats().items()
                     if not isinstance(v, (list, dict))})
+        # per-compression-strategy prefill token reduction (dim 1): what
+        # the mixed-workload benchmarks chart per preset
+        for name, cs in self.engine.compression_stats().items():
+            for k, v in cs.items():
+                out[f"compression/{name}/{k}"] = v
         return out

@@ -324,7 +324,7 @@ def test_prefix_pin_blocks_eviction_until_release(lvlm):
     req = Request(rid=0, tokens=a + [99], max_new_tokens=2)
     eng.submit(req)
     eng.step()                                    # prefill: hits + pins A
-    key = tuple(a)
+    key = ("none", tuple(a))      # prefix keys carry the compression variant
     assert eng._prefix_pins.get(key, 0) == 1
     eng._prefix_insert(list(range(101, 109)), 0, 8)   # over cap: A pinned
     assert key in eng._prefix

@@ -1,0 +1,309 @@
+"""Per-request pluggable CompressionStrategy (PR tentpole).
+
+Acceptance contract of bringing visual-token compression to API parity
+with decoders:
+
+  * mixed-compression batch equivalence: one engine serving ``none`` /
+    ``fastv-0.5`` / ``framefusion-0.25`` requests emits, per request at
+    temperature 0, bit-identical tokens to three single-preset runs,
+  * KV accounting (admission watermarks / ``kv_request_tokens`` /
+    ``least_kv`` routing) uses POST-compression token counts -- the
+    reservation shrinks with ``keep_ratio``,
+  * prefix-cache keys include the compression variant: the same prompt
+    under two variants yields two entries, and a hit is bit-identical to
+    a cold prefill under that variant,
+  * cross-modal pruners receive the text-prompt ``query`` embeddings
+    (the old engine path passed ``query=None``),
+  * ``GenerationConfig.compression`` registers a NAMED default strategy
+    instead of mutating ``EngineConfig.compression``,
+  * custom duck-typed strategies register via ``Engine(compressors=...)``;
+    per-request KV compaction on a non-compacting engine errors cleanly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CompressionConfig, EngineConfig, GenerationConfig,
+                       LVLM, Request, make_compressor)
+from repro.core.serving import Engine
+from repro.core.token_compression.policy import (compress_visual_tokens,
+                                                 compressed_token_count)
+
+MIX_PRESETS = ("none", "fastv-0.5", "framefusion-0.25")
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    return LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+
+
+def _workload(cfg, n, seed=5, lo=7, hi=13):
+    rng = np.random.RandomState(seed)
+    prompts = [list(rng.randint(1, cfg.vocab_size,
+                                size=rng.randint(lo, hi))) for _ in range(n)]
+    ves = [rng.randn(cfg.num_visual_tokens, cfg.d_model).astype(np.float32)
+           * 0.02 for _ in range(n)]
+    return prompts, ves
+
+
+# -------------------------------------------- mixed-batch equivalence --
+
+
+@pytest.mark.slow
+def test_mixed_compression_batch_matches_single_preset_runs(vlm):
+    """The acceptance criterion: none / fastv-0.5 / framefusion-0.25 in
+    ONE batch, each request bit-identical to its single-preset run."""
+    prompts, ves = _workload(vlm.cfg, 3)
+    reqs = [Request(rid=i, tokens=list(p), max_new_tokens=6,
+                    visual_embeds=ve, compression=c)
+            for i, (p, ve, c) in enumerate(zip(prompts, ves, MIX_PRESETS))]
+    rep = vlm.serve(reqs,
+                    EngineConfig(max_batch=3, cache_len=96,
+                                 temperature=0.0),
+                    gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                         max_new_tokens=6))
+    assert rep.stats["finished"] == 3
+    by_rid = {r.rid: r.generated for r in rep.requests}
+    for i, preset in enumerate(MIX_PRESETS):
+        ref = vlm.generate(prompts[i], GenerationConfig(
+            decoder="greedy", max_new_tokens=6, compression=preset),
+            visual_embeds=ves[i])
+        assert by_rid[i] == ref.tokens, preset
+
+
+def test_mixed_compression_smoke(vlm):
+    """Fast CI smoke: ``none`` + ``fastv-0.5`` requests in one batch
+    finish, compress to the right per-slot visual counts, and report
+    per-strategy prefill token reduction."""
+    prompts, ves = _workload(vlm.cfg, 2, seed=6)
+    nv = vlm.cfg.num_visual_tokens
+    reqs = [Request(rid=0, tokens=list(prompts[0]), max_new_tokens=3,
+                    visual_embeds=ves[0]),
+            Request(rid=1, tokens=list(prompts[1]), max_new_tokens=3,
+                    visual_embeds=ves[1], compression="fastv-0.5")]
+    rep = vlm.serve(reqs, EngineConfig(max_batch=2, cache_len=64,
+                                       temperature=0.0),
+                    gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                         max_new_tokens=3))
+    assert rep.stats["finished"] == 2
+    eng = rep.engine
+    assert eng.slot_nv[0] == nv
+    assert eng.slot_nv[1] == nv // 2
+    cs = eng.compression_stats()
+    assert cs["none"]["prefill_token_reduction"] == 0.0
+    assert cs["fastv-0.5"]["prefill_token_reduction"] == pytest.approx(0.5)
+    assert rep.stats["compression/fastv-0.5/visual_tokens_out"] == nv // 2
+
+
+# ------------------------------------------------------ KV accounting --
+
+
+def test_kv_reservation_shrinks_with_keep_ratio(vlm):
+    """Admission / kv_request_tokens must reserve the POST-compression
+    prompt, monotonically shrinking with keep_ratio."""
+    eng = Engine(vlm.model, vlm.params,
+                 EngineConfig(max_batch=2, cache_len=256))
+    rng = np.random.RandomState(0)
+    ve = rng.randn(vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+                   ).astype(np.float32)
+
+    def reserved(compression):
+        return eng.kv_request_tokens(Request(
+            rid=99, tokens=list(range(1, 13)), max_new_tokens=8,
+            visual_embeds=ve, compression=compression))
+
+    full, half, quarter = (reserved(None), reserved("fastv-0.5"),
+                           reserved("fastv-0.25"))
+    assert full > half >= quarter
+    # exact: text 12 + nv 16 + new 8 = 36 -> 48; halved nv 8 -> 28 -> 32
+    assert full == 48 and half == 32
+    # committed pressure (the admission watermark signal) shrinks too
+    r = Request(rid=0, tokens=list(range(1, 13)), max_new_tokens=8,
+                visual_embeds=ve, compression="fastv-0.5")
+    eng.submit(r)
+    assert eng.kv_committed_tokens() == half
+
+
+def test_least_kv_routing_sees_compressed_load(vlm):
+    """JSQ on KV must see that a compressed request is lighter: a replica
+    holding the fastv-0.25 variant of the SAME workload reports a lower
+    kv_load than its sibling holding the uncompressed one."""
+    router = vlm.serve_cluster(2, EngineConfig(max_batch=2, cache_len=256),
+                               routing="least_kv")
+    ra, rb = router.replicas
+    rng = np.random.RandomState(1)
+    ve = rng.randn(vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+                   ).astype(np.float32)
+    toks = list(range(1, 13))
+    ra.inflight[0] = Request(rid=0, tokens=list(toks), max_new_tokens=8,
+                             visual_embeds=ve, compression="fastv-0.25")
+    rb.inflight[1] = Request(rid=1, tokens=list(toks), max_new_tokens=8,
+                             visual_embeds=ve)
+    assert ra.kv_load() < rb.kv_load()
+
+
+def test_compressed_token_count_matches_compressor_output():
+    """The shape-only accounting count must equal what the pruner/merger
+    actually emits, for every preset family (incl. tome's capped-round
+    loop)."""
+    rng = np.random.RandomState(3)
+    embeds = jnp.asarray(rng.randn(1, 48, 16), jnp.float32)
+    for preset in ("none", "fastv-0.5", "l2-0.3", "divprune-0.25",
+                   "tome-0.4", "framefusion-0.25"):
+        strat = make_compressor(preset)
+        out, _idx, _info = compress_visual_tokens(strat.cc, embeds)
+        assert out.shape[1] == strat.compressed_token_count(48), preset
+        assert (strat.compressed_token_count(48)
+                == compressed_token_count(strat.cc, 48))
+
+
+# -------------------------------------------------- prefix-cache keys --
+
+
+def test_prefix_cache_two_variants_two_entries(vlm):
+    """Same prompt under two compression variants must produce two cache
+    entries -- a fastv-0.5 prefill never serves a none lookup."""
+    eng = Engine(vlm.model, vlm.params,
+                 EngineConfig(max_batch=2, cache_len=64, prefix_cache=True,
+                              prefix_block=8))
+    prompt = list(range(1, 17))
+    eng.submit(Request(rid=0, tokens=list(prompt), max_new_tokens=2))
+    eng.submit(Request(rid=1, tokens=list(prompt), max_new_tokens=2,
+                       compression="fastv-0.5"))
+    eng.run()
+    variants = {key[0] for key in eng._prefix}
+    assert len(eng._prefix) == 2
+    assert variants == {"none", "fastv-0.5"}
+    # lookups are variant-scoped
+    assert eng._prefix_lookup(prompt, variant="none")[0] == 16
+    assert eng._prefix_lookup(prompt, variant="fastv-0.5")[0] == 16
+    assert eng._prefix_lookup(prompt, variant="divprune-0.5")[0] == 0
+
+
+def test_prefix_hit_bit_identical_to_cold_prefill(vlm):
+    """A prefix hit under a variant reproduces the cold prefill under
+    that variant bit-for-bit."""
+    rng = np.random.RandomState(9)
+    prompt = list(rng.randint(1, vlm.cfg.vocab_size, size=16))
+
+    def run(prefix_cache):
+        eng = Engine(vlm.model, vlm.params,
+                     EngineConfig(max_batch=1, cache_len=64,
+                                  prefix_cache=prefix_cache,
+                                  prefix_block=8))
+        outs = []
+        for rid in (0, 1):
+            r = Request(rid=rid, tokens=list(prompt), max_new_tokens=4,
+                        compression="fastv-0.5")
+            eng.submit(r)
+            eng.run()
+            outs.append(list(r.generated))
+        return outs, eng
+
+    (warm_a, warm_b), eng = run(prefix_cache=True)
+    (cold_a, cold_b), _ = run(prefix_cache=False)
+    assert eng.prefix_hit_tokens > 0          # second run really reused
+    assert warm_a == cold_a
+    assert warm_b == cold_b
+
+
+# ----------------------------------------------------- query threading --
+
+
+def test_cross_modal_pruner_receives_prompt_query(vlm):
+    """The engine threads the text-prompt embeddings into cross-modal
+    pruners: a sparsevlm request's tokens equal a run over the SAME
+    visual tokens pre-compressed WITH the query (and the query changes
+    which tokens survive, so None would diverge)."""
+    from repro.models.layers import embed_tokens
+
+    rng = np.random.RandomState(12)
+    prompt = list(rng.randint(1, vlm.cfg.vocab_size, size=9))
+    ve = rng.randn(vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+                   ).astype(np.float32) * 0.02
+    cc = CompressionConfig(token_pruner="sparsevlm", keep_ratio=0.5)
+    query = embed_tokens(vlm.params["embed"],
+                         jnp.asarray([prompt], jnp.int32))
+    _, idx_q, _ = compress_visual_tokens(cc, jnp.asarray(ve)[None],
+                                         query=query)
+    _, idx_none, _ = compress_visual_tokens(
+        cc, jnp.asarray(ve)[None],
+        query=jnp.zeros_like(query))
+    # the query genuinely conditions the selection at this seed
+    assert not np.array_equal(np.asarray(idx_q), np.asarray(idx_none))
+
+    out = vlm.generate(prompt, GenerationConfig(
+        decoder="greedy", max_new_tokens=4, compression="sparsevlm-0.5"),
+        visual_embeds=ve)
+    ve_q, _, _ = compress_visual_tokens(cc, jnp.asarray(ve)[None],
+                                        query=query)
+    ref = vlm.generate(prompt, GenerationConfig(
+        decoder="greedy", max_new_tokens=4, compression="none"),
+        visual_embeds=np.asarray(ve_q[0]))
+    assert out.tokens == ref.tokens
+
+
+# ------------------------------------------------- registry & layering --
+
+
+def test_generation_config_registers_named_default(vlm):
+    """GenerationConfig.compression is sugar for a NAMED registered
+    strategy; EngineConfig.compression is no longer mutated."""
+    rng = np.random.RandomState(2)
+    reqs = [Request(rid=0, tokens=list(rng.randint(1, 512, size=8)),
+                    max_new_tokens=2)]
+    rep = vlm.serve(reqs, EngineConfig(max_batch=1, cache_len=64),
+                    gen=GenerationConfig(decoder="greedy", max_new_tokens=2,
+                                         compression="fastv-0.5"))
+    eng = rep.engine
+    assert eng._default_comp_name == "fastv-0.5"
+    assert "fastv-0.5" in eng._compressors
+    assert eng.ec.compression == CompressionConfig()   # untouched
+
+
+def test_custom_strategy_via_engine_registry(vlm):
+    """A duck-typed custom strategy registers under Engine(compressors=)
+    and serves requests that name it."""
+    class KeepHalf:
+        name = "keep-half"
+        encoder_active = True
+
+        def compress_prefill(self, embeds, *, query=None, scores=None):
+            keep = embeds.shape[1] // 2
+            return embeds[:, :keep], None, {"method": "keep-half"}
+
+        def compressed_token_count(self, n):
+            return n // 2
+
+    rng = np.random.RandomState(4)
+    ve = rng.randn(vlm.cfg.num_visual_tokens, vlm.cfg.d_model
+                   ).astype(np.float32) * 0.02
+    eng = Engine(vlm.model, vlm.params,
+                 EngineConfig(max_batch=1, cache_len=64),
+                 compressors={"keep-half": KeepHalf()})
+    r = Request(rid=0, tokens=list(rng.randint(1, 512, size=8)),
+                max_new_tokens=2, visual_embeds=ve,
+                compression="keep-half")
+    eng.submit(r)
+    assert eng.kv_request_tokens(r) == 32     # 8 + 8 + 2 -> block 32
+    eng.run()
+    assert eng.slot_nv[0] == vlm.cfg.num_visual_tokens // 2
+    assert len(r.generated) == 2
+
+
+def test_per_request_kv_compaction_needs_compacting_engine(vlm):
+    """A per-request KV-compacting strategy on a non-compacting engine is
+    a clean ValueError at submit, not cache corruption."""
+    eng = Engine(vlm.model, vlm.params,
+                 EngineConfig(max_batch=1, cache_len=64))
+    with pytest.raises(ValueError, match="compact"):
+        eng.submit(Request(rid=0, tokens=list(range(1, 9)),
+                           max_new_tokens=2, compression="streaming-kv"))
+
+
+def test_unknown_compression_name_rejected(vlm):
+    eng = Engine(vlm.model, vlm.params,
+                 EngineConfig(max_batch=1, cache_len=64))
+    with pytest.raises(ValueError, match="unknown compression"):
+        eng.submit(Request(rid=0, tokens=[1, 2, 3], max_new_tokens=2,
+                           compression="quantum-entangle-0.5"))

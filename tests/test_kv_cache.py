@@ -222,6 +222,34 @@ def test_radix_prefix_match_insert():
     cache.unpin(pinned2)
 
 
+def test_radix_variant_namespacing():
+    """Prefix entries are namespaced by compression variant: the same
+    tokens inserted under two variants are two independent entries, and a
+    lookup never crosses namespaces (a fastv-0.5 prefill must not serve a
+    none lookup)."""
+    alloc = BlockAllocator(num_blocks=64, block_size=4)
+    cache = RadixPrefixCache(alloc)
+    toks = list(range(100, 112))                 # 12 tokens = 3 blocks
+    blocks_none = [alloc.alloc() for _ in range(3)]
+    blocks_fastv = [alloc.alloc() for _ in range(3)]
+    cache.insert(toks, blocks_none, block_size=4)
+    cache.insert(toks, blocks_fastv, block_size=4, variant="fastv-0.5")
+    # each variant resolves to ITS OWN blocks
+    got, matched, pinned = cache.match_prefix(toks)
+    assert matched == 12 and got == blocks_none
+    cache.unpin(pinned)
+    got, matched, pinned = cache.match_prefix(toks, variant="fastv-0.5")
+    assert matched == 12 and got == blocks_fastv
+    cache.unpin(pinned)
+    # an unseen variant misses entirely
+    _, matched, _ = cache.match_prefix(toks, variant="divprune-0.25")
+    assert matched == 0
+    # two entries exist (one radix path per variant); eviction can reap
+    # BOTH namespaces once unpinned
+    assert cache.stats()["cached_blocks"] == 6
+    assert cache.evict(6) == 6
+
+
 def test_radix_eviction_respects_refcount():
     alloc = BlockAllocator(num_blocks=8, block_size=4)
     cache = RadixPrefixCache(alloc)

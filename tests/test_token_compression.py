@@ -94,6 +94,56 @@ def test_fastv_scores_and_policy():
     assert kept.shape == (b, 8, 8)
 
 
+def test_fastv_scores_uniform_attention_is_uniform():
+    """Uniform attention spreads 1/Sk to every key: each visual token's
+    received-attention score must be exactly 1/Sk."""
+    b, h, sq, sk = 2, 3, 5, 20
+    attn = jnp.full((b, h, sq, sk), 1.0 / sk)
+    scores = fastv_scores_from_attention(attn, (4, 12))
+    assert scores.shape == (b, 8)
+    np.testing.assert_allclose(np.asarray(scores), 1.0 / sk, rtol=1e-6)
+
+
+def test_fastv_scores_mean_over_heads_and_queries_with_offset_slice():
+    """Score = mean over heads AND queries of the attention each visual
+    KEY receives, honoring a non-zero slice start: concentrating every
+    query on key ``start + j`` must make j the argmax, and hand-computed
+    means must match exactly."""
+    b, h, sq, sk, start, stop = 1, 2, 4, 16, 5, 13
+    rng = np.random.RandomState(0)
+    attn = rng.rand(b, h, sq, sk).astype(np.float32)
+    attn /= attn.sum(-1, keepdims=True)
+    scores = fastv_scores_from_attention(jnp.asarray(attn), (start, stop))
+    expect = attn[..., start:stop].mean(axis=(1, 2))
+    np.testing.assert_allclose(np.asarray(scores), expect, rtol=1e-6)
+    # concentrated attention: all mass on visual key j (absolute index
+    # start + j) -> that key dominates the in-slice scores
+    j = 2
+    conc = np.full((b, h, sq, sk), 1e-4, np.float32)
+    conc[..., start + j] = 1.0
+    conc /= conc.sum(-1, keepdims=True)
+    s = np.asarray(fastv_scores_from_attention(jnp.asarray(conc),
+                                               (start, stop)))
+    assert int(s[0].argmax()) == j
+    # keys OUTSIDE the visual slice never leak into the scores
+    assert s.shape == (b, stop - start)
+
+
+def test_fastv_scores_drive_pruner_to_attended_tokens():
+    """End-to-end: the tokens FastV keeps are exactly the most-attended
+    visual keys under the scores this helper computes."""
+    b, h, sq, n = 1, 2, 6, 12
+    hot = [1, 4, 7, 10]
+    attn = np.full((b, h, sq, n), 1e-3, np.float32)
+    for k in hot:
+        attn[..., k] = 1.0
+    attn /= attn.sum(-1, keepdims=True)
+    scores = fastv_scores_from_attention(jnp.asarray(attn), (0, n))
+    cc = CompressionConfig(token_pruner="fastv", keep_ratio=len(hot) / n)
+    _, idx, _ = compress_visual_tokens(cc, _embeds(b, n, 8), scores=scores)
+    assert sorted(np.asarray(idx[0]).tolist()) == hot
+
+
 def test_tome_merge_reduces_and_conserves():
     b, n, d = 1, 32, 8
     embeds = _embeds(b, n, d)
