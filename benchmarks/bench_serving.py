@@ -26,10 +26,9 @@ import json
 import numpy as np
 
 from benchmarks.common import emit
-from repro.api import (AdmissionConfig, EngineConfig, GenerationConfig, LVLM,
-                       Request)
-from repro.core.serving import (CostModel, PoolConfig, goodput,
-                                simulate_colocated, simulate_disaggregated)
+from repro.api import (AdmissionConfig, CostModel, EngineConfig,
+                       GenerationConfig, LVLM, PoolConfig, Request, goodput,
+                       simulate_colocated, simulate_disaggregated)
 
 
 def _pcts(out, metric: str) -> str:

@@ -16,6 +16,8 @@ import numpy as np
 
 from benchmarks.common import emit, time_jit
 from repro.configs import get_config
+# analysis: allow L001 (micro-bench: times internal pruning kernels
+# directly rather than through the per-request facade strategies)
 from repro.core.token_compression.pruning import PRUNERS
 from repro.models import build
 

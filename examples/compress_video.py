@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.compressors import make_compressor
-from repro.core.token_compression import video as V
+from repro.api import video as V
 
 
 def synthetic_video(frames=16, patches=64, d=32, seed=0):

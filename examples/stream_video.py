@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import LVLM
-from repro.core.kv_cache.selection import select_streaming
-from repro.core.token_compression import video as V
+from repro.api import video as V
+from repro.api.video import select_streaming
 
 
 def synthetic_stream(n_clips, frames=8, patches=16, d=256, seed=0):

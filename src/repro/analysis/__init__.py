@@ -1,0 +1,62 @@
+"""``repro.analysis`` -- architecture lint, resource-pairing and
+async-hazard checker, plus the runtime sanitizer the checks feed into.
+
+The repo's layering and resource-lifecycle rules (ROADMAP "Standing
+layering rules"; the acquire/release discipline PRs 2-5 grew around slot
+pools, draft rows, gamma reservations, and prefix pins) were enforced
+only by convention and after-the-fact tests. This subsystem makes them
+machine-checked:
+
+  * **L-rules** (layering): ``repro.core.*`` stays internal -- no core
+    imports outside ``src/repro``; ``EngineConfig.compression`` is never
+    mutated outside the facade; ``Engine`` is constructed only behind
+    the ``LVLM`` facade.
+  * **R-rules** (resource pairing): every slot / draft-row / gamma /
+    prefix-pin acquire site in the engine, server, and router must be
+    paired with a matching release -- checked with a per-function CFG
+    walk over the known acquire/release API table (``tables.py``), plus
+    a release-completeness check on ``Engine._release_request`` and the
+    other canonical release functions.
+  * **A-rules** (async hazards): blocking calls inside ``async def``
+    pumps; shared mutable server/router state read before and written
+    after an ``await`` without a documented ``# analysis: atomic-step``
+    fence; fire-and-forget ``create_task``.
+  * **K-rules** (Pallas kernels): index_map arity vs grid (+ scalar
+    prefetch), kernel-signature ref counts vs specs, literal grid x
+    block divisibility, and output-ref stores without an explicit
+    ``astype`` (dtype hazards).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis [--rules L001,R002] [paths]
+    PYTHONPATH=src python -m repro.analysis --fail-on-regression \
+        --baseline analysis_baseline.json
+    PYTHONPATH=src python -m repro.analysis --write-baseline
+
+Findings carry rule id, severity, and file:line. A committed baseline
+(``analysis_baseline.json``) waives pre-existing findings so CI fails
+only on regressions; per-line waivers use ``# analysis: allow L001
+(reason)``.
+
+The runtime half (``repro.analysis.sanitizer``) is wired into
+``Engine.step`` and the ``AsyncLVLMServer`` pump via
+``EngineConfig.sanitize`` / ``REPRO_SANITIZE=1``: conservation asserts
+(kv committed == sum of live reservations, draft-pool bound rows subset
+of live slots, prefix pins == live pinning requests) confirm or refute
+R-rule findings with runtime evidence.
+"""
+from repro.analysis.findings import (Baseline, Finding, parse_waivers)
+from repro.analysis.registry import ALL_RULES, RULE_FAMILIES, select_rules
+from repro.analysis.runner import (DEFAULT_PATHS, analyze_file,
+                                   analyze_source, run_analysis)
+from repro.analysis.sanitizer import (SanitizerError, check_engine_conservation,
+                                      check_server_conservation,
+                                      sanitize_enabled)
+
+__all__ = [
+    "Finding", "Baseline", "parse_waivers",
+    "ALL_RULES", "RULE_FAMILIES", "select_rules",
+    "analyze_source", "analyze_file", "run_analysis", "DEFAULT_PATHS",
+    "SanitizerError", "check_engine_conservation",
+    "check_server_conservation", "sanitize_enabled",
+]

@@ -1,0 +1,76 @@
+"""Rule registry: rule ids -> checker instances, family selection.
+
+A rule is a small class with ``rule_id``, ``family`` (L/R/A/K),
+``severity``, ``description``, a path filter (``applies``), and a
+``check(tree, src, path) -> [Finding]``. Registration is by decorator;
+``select_rules`` accepts exact ids ("L001"), families ("R"), or "all".
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.analysis.findings import Finding
+
+ALL_RULES: Dict[str, "Rule"] = {}
+RULE_FAMILIES = ("L", "R", "A", "K")
+
+
+class Rule:
+    rule_id = "X000"
+    family = "X"
+    severity = "error"
+    description = ""
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, line: int, message: str,
+                severity: str = None) -> Finding:
+        return Finding(path=path, line=line, rule=self.rule_id,
+                       severity=severity or self.severity, message=message)
+
+
+def register(cls):
+    inst = cls()
+    if inst.rule_id in ALL_RULES:
+        raise ValueError(f"duplicate rule id {inst.rule_id}")
+    ALL_RULES[inst.rule_id] = inst
+    return cls
+
+
+def select_rules(spec=None) -> Dict[str, Rule]:
+    """``spec``: None/"all", or iterable of rule ids and/or families."""
+    _load()
+    if spec in (None, "all", ("all",), ["all"]):
+        return dict(ALL_RULES)
+    out: Dict[str, Rule] = {}
+    for item in spec:
+        item = item.strip()
+        if item in ALL_RULES:
+            out[item] = ALL_RULES[item]
+        elif item in RULE_FAMILIES:
+            out.update({rid: r for rid, r in ALL_RULES.items()
+                        if r.family == item})
+        else:
+            raise ValueError(
+                f"unknown rule or family {item!r}; known: "
+                f"{sorted(ALL_RULES)} / families {RULE_FAMILIES}")
+    return out
+
+
+def _load() -> None:
+    """Import every rules module (registration is import-time)."""
+    from repro.analysis import (rules_async, rules_kernels,  # noqa: F401
+                                rules_layering, rules_resource)
+
+
+def rule_table() -> List[Dict]:
+    """[{id, family, severity, description}] for docs / --list-rules."""
+    _load()
+    return [{"id": r.rule_id, "family": r.family, "severity": r.severity,
+             "description": r.description}
+            for r in sorted(ALL_RULES.values(), key=lambda r: r.rule_id)]

@@ -1,0 +1,338 @@
+"""K-rules: Pallas kernel consistency checks (``src/repro/kernels``).
+
+Static shape/arity checks on every ``pl.pallas_call`` site -- the
+mistakes these catch produce opaque Mosaic/XLA errors (or silent
+garbage in interpret mode) at runtime:
+
+K001  index_map arity: every ``pl.BlockSpec`` index_map must take
+      ``len(grid) + num_scalar_prefetch`` required positional args
+      (defaulted lambda params, e.g. ``g=group`` closures, are extra
+      and ignored).
+K002  kernel signature vs specs: the kernel function's required
+      positional parameter count must equal
+      ``num_scalar_prefetch + len(in_specs) + len(out_specs) +
+      len(scratch_shapes)`` (keyword-only params are config, not refs).
+K003  literal divisibility: when the out_shape dims, grid, and block
+      shape are integer literals (constant-foldable), each blocked dim
+      must satisfy ``grid[i] * block[i] == dim`` or ``dim % block == 0``
+      -- a partial final tile needs explicit masking.
+K004  output-ref stores without ``.astype(...)``: accumulation runs in
+      f32 scratch; storing to the output ref without an explicit astype
+      is a dtype-mismatch hazard between refs and the declared
+      out_shape dtype.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    f = node.func
+    return isinstance(f, ast.Attribute) and f.attr == "pallas_call"
+
+
+def _const_int(node: ast.expr, env: Dict[str, int]) -> Optional[int]:
+    """Best-effort integer constant folding (literals, +-*// of
+    literals, names bound to folded literals in the same function)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.BinOp):
+        left = _const_int(node.left, env)
+        right = _const_int(node.right, env)
+        if left is None or right is None:
+            return None
+        if isinstance(node.op, ast.Mult):
+            return left * right
+        if isinstance(node.op, ast.Add):
+            return left + right
+        if isinstance(node.op, ast.Sub):
+            return left - right
+        if isinstance(node.op, ast.FloorDiv) and right:
+            return left // right
+        if isinstance(node.op, ast.Mod) and right:
+            return left % right
+    return None
+
+
+class _Site:
+    """One pallas_call site with its resolved pieces."""
+
+    def __init__(self, call: ast.Call, fn: Optional[ast.FunctionDef],
+                 module: ast.Module):
+        self.call = call
+        self.fn = fn
+        self.module = module
+        self.env: Dict[str, int] = {}
+        scope = fn if fn is not None else module
+        for stmt in ast.walk(scope):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                val = _const_int(stmt.value, self.env)
+                if val is not None:
+                    self.env[stmt.targets[0].id] = val
+
+    def _resolve(self, node: Optional[ast.expr]) -> Optional[ast.expr]:
+        """Follow a Name to its single assignment in fn scope."""
+        seen = 0
+        while isinstance(node, ast.Name):
+            found = None
+            scope = self.fn if self.fn is not None else self.module
+            for stmt in ast.walk(scope):
+                if isinstance(stmt, ast.Assign) \
+                        and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and stmt.targets[0].id == node.id:
+                    found = stmt.value
+            if found is None or seen > 4:
+                return node
+            node, seen = found, seen + 1
+        return node
+
+    @property
+    def grid_spec(self) -> Optional[ast.Call]:
+        gs = self._resolve(_kw(self.call, "grid_spec"))
+        return gs if isinstance(gs, ast.Call) else None
+
+    def _spec_kw(self, name: str) -> Optional[ast.expr]:
+        """Keyword from pallas_call, or from its grid_spec."""
+        v = _kw(self.call, name)
+        if v is None and self.grid_spec is not None:
+            v = _kw(self.grid_spec, name)
+        return self._resolve(v)
+
+    @property
+    def grid(self) -> Optional[List[ast.expr]]:
+        g = self._spec_kw("grid")
+        if isinstance(g, ast.Tuple):
+            return list(g.elts)
+        return None
+
+    @property
+    def num_scalar_prefetch(self) -> int:
+        v = self._spec_kw("num_scalar_prefetch")
+        n = _const_int(v, self.env) if v is not None else 0
+        return n or 0
+
+    def _spec_list(self, name: str) -> List[ast.expr]:
+        v = self._spec_kw(name)
+        if isinstance(v, (ast.List, ast.Tuple)):
+            return [self._resolve(e) for e in v.elts]
+        return [v] if v is not None else []
+
+    @property
+    def in_specs(self) -> List[ast.expr]:
+        return self._spec_list("in_specs")
+
+    @property
+    def out_specs(self) -> List[ast.expr]:
+        return self._spec_list("out_specs")
+
+    @property
+    def scratch_shapes(self) -> List[ast.expr]:
+        return self._spec_list("scratch_shapes")
+
+    @property
+    def out_shapes(self) -> List[ast.expr]:
+        v = self._spec_kw("out_shape")
+        if isinstance(v, (ast.List, ast.Tuple)):
+            return [self._resolve(e) for e in v.elts]
+        return [v] if v is not None else []
+
+    def kernel_fn(self) -> Optional[ast.FunctionDef]:
+        """The kernel FunctionDef: first positional arg, unwrapped
+        through ``functools.partial`` and local aliases."""
+        if not self.call.args:
+            return None
+        node = self._resolve(self.call.args[0])
+        if isinstance(node, ast.Call):     # functools.partial(kern, ...)
+            if node.args:
+                node = self._resolve(node.args[0])
+        if isinstance(node, ast.Name):
+            for stmt in ast.walk(self.module):
+                if isinstance(stmt, ast.FunctionDef) \
+                        and stmt.name == node.id:
+                    return stmt
+        return None
+
+
+def _sites(tree: ast.Module):
+    fn_of: Dict[int, ast.FunctionDef] = {}
+    for fn in ast.walk(tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for n in ast.walk(fn):
+                fn_of.setdefault(id(n), fn)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_pallas_call(node):
+            yield _Site(node, fn_of.get(id(node)), tree)
+
+
+def _block_specs(site: _Site):
+    """(spec_call, role) for every pl.BlockSpec with a block shape."""
+    for role, specs in (("in", site.in_specs), ("out", site.out_specs)):
+        for s in specs:
+            if isinstance(s, ast.Call) \
+                    and isinstance(s.func, ast.Attribute) \
+                    and s.func.attr == "BlockSpec":
+                yield s, role
+
+
+class _KernelRule(Rule):
+    family = "K"
+
+    def applies(self, path: str) -> bool:
+        return "kernels/" in path or path.endswith("_kernel.py")
+
+
+@register
+class IndexMapArityRule(_KernelRule):
+    rule_id = "K001"
+    severity = "error"
+    description = ("BlockSpec index_map arity != len(grid) + "
+                   "num_scalar_prefetch")
+
+    def check(self, tree, src, path) -> List[Finding]:
+        out: List[Finding] = []
+        for site in _sites(tree):
+            grid = site.grid
+            if grid is None:
+                continue
+            want = len(grid) + site.num_scalar_prefetch
+            for spec, role in _block_specs(site):
+                lam = None
+                if len(spec.args) >= 2 and isinstance(spec.args[1],
+                                                      ast.Lambda):
+                    lam = spec.args[1]
+                im = _kw(spec, "index_map")
+                if isinstance(im, ast.Lambda):
+                    lam = im
+                if lam is None:
+                    continue
+                a = lam.args
+                required = len(a.args) - len(a.defaults)
+                if required != want:
+                    out.append(self.finding(
+                        path, lam.lineno,
+                        f"{role}_spec index_map takes {required} required "
+                        f"args; grid has {len(grid)} dims "
+                        f"+ {site.num_scalar_prefetch} scalar-prefetch "
+                        f"operands = {want}"))
+        return out
+
+
+@register
+class KernelSignatureRule(_KernelRule):
+    rule_id = "K002"
+    severity = "error"
+    description = ("kernel positional params != scalar_prefetch + in + "
+                   "out + scratch refs")
+
+    def check(self, tree, src, path) -> List[Finding]:
+        out: List[Finding] = []
+        for site in _sites(tree):
+            kern = site.kernel_fn()
+            if kern is None or not (site.in_specs or site.out_specs):
+                continue
+            want = (site.num_scalar_prefetch + len(site.in_specs)
+                    + len(site.out_specs) + len(site.scratch_shapes))
+            got = len(kern.args.args) - len(kern.args.defaults)
+            if got != want:
+                out.append(self.finding(
+                    path, kern.lineno,
+                    f"kernel `{kern.name}` takes {got} required positional "
+                    f"refs; specs declare {site.num_scalar_prefetch} "
+                    f"scalar-prefetch + {len(site.in_specs)} in + "
+                    f"{len(site.out_specs)} out + "
+                    f"{len(site.scratch_shapes)} scratch = {want}"))
+        return out
+
+
+@register
+class GridDivisibilityRule(_KernelRule):
+    rule_id = "K003"
+    severity = "error"
+    description = ("literal out_shape dim not divisible by its BlockSpec "
+                   "block dim (partial tile without masking)")
+
+    def check(self, tree, src, path) -> List[Finding]:
+        out: List[Finding] = []
+        for site in _sites(tree):
+            grid = site.grid
+            shapes = site.out_shapes
+            specs = [s for s, role in _block_specs(site) if role == "out"]
+            if grid is None or not shapes or not specs:
+                continue
+            for spec, shape in zip(specs, shapes):
+                if not (isinstance(shape, ast.Call) and shape.args):
+                    continue
+                dims_node = shape.args[0]
+                if not isinstance(dims_node, ast.Tuple):
+                    continue
+                dims = [_const_int(e, site.env) for e in dims_node.elts]
+                blk = spec.args[0] if spec.args else None
+                if not isinstance(blk, ast.Tuple):
+                    continue
+                blocks = [_const_int(e, site.env) for e in blk.elts]
+                for i, (dim, b) in enumerate(zip(dims, blocks)):
+                    if dim is None or b is None or b == 0:
+                        continue
+                    if dim % b:
+                        out.append(self.finding(
+                            path, spec.lineno,
+                            f"out dim {i} = {dim} is not a multiple of "
+                            f"block dim {b}; pad the operand or mask the "
+                            "partial tile"))
+        return out
+
+
+@register
+class OutputAstypeRule(_KernelRule):
+    rule_id = "K004"
+    severity = "warning"
+    description = ("store to an output ref without .astype(...) -- f32 "
+                   "accumulator vs out dtype hazard")
+
+    def check(self, tree, src, path) -> List[Finding]:
+        out: List[Finding] = []
+        kernels = set()
+        for site in _sites(tree):
+            kern = site.kernel_fn()
+            if kern is not None:
+                kernels.add(kern)
+        for kern in kernels:
+            out_refs = {a.arg for a in kern.args.args
+                        if a.arg in ("o_ref", "out_ref") or
+                        a.arg.startswith(("o_", "out_"))}
+            if not out_refs:
+                continue
+            for node in ast.walk(kern):
+                if not isinstance(node, ast.Assign):
+                    continue
+                for t in node.targets:
+                    if isinstance(t, ast.Subscript) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id in out_refs:
+                        has_astype = any(
+                            isinstance(c, ast.Call)
+                            and isinstance(c.func, ast.Attribute)
+                            and c.func.attr == "astype"
+                            for c in ast.walk(node.value))
+                        if not has_astype:
+                            out.append(self.finding(
+                                path, node.lineno,
+                                f"store to `{t.value.id}` without "
+                                ".astype(ref.dtype); accumulators are f32, "
+                                "the out_shape dtype may not be"))
+        return out

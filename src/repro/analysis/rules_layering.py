@@ -1,0 +1,137 @@
+"""L-rules: architecture layering (ROADMAP "Standing layering rules").
+
+L001  ``repro.core.*`` (and ``repro.serving``/``repro.cluster`` internals
+      reached via core) imports outside ``src/repro`` -- examples,
+      benchmarks, and scripts must go through the ``repro.api`` facade.
+      Micro-benchmarks may keep core imports with an explicit waiver:
+      ``# analysis: allow L001 (micro-bench)``.
+L002  ``EngineConfig.compression`` mutated outside the facade -- the
+      facade registers named strategies instead (PR 5's rule).
+L003  ``Engine(...)`` constructed outside ``src/repro`` -- external
+      layers use ``LVLM.serve*``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+from repro.analysis.tables import (COMPRESSION_MUTATION_OK_PREFIXES,
+                                   ENGINE_CONSTRUCTION_OK_PREFIXES,
+                                   INTERNAL_IMPORT_OK_PREFIXES)
+
+
+def _under(path: str, prefixes) -> bool:
+    return any(path.startswith(p) for p in prefixes)
+
+
+@register
+class CoreImportRule(Rule):
+    rule_id = "L001"
+    family = "L"
+    severity = "error"
+    description = ("repro.core.* import outside src/repro "
+                   "(use the repro.api facade)")
+
+    def applies(self, path: str) -> bool:
+        return not _under(path, INTERNAL_IMPORT_OK_PREFIXES)
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            mod = None
+            if isinstance(node, ast.ImportFrom) and node.module:
+                mod = node.module
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith("repro.core"):
+                        mod = alias.name
+                        break
+            if mod and mod.startswith("repro.core"):
+                out.append(self.finding(
+                    path, node.lineno,
+                    f"imports internal layer `{mod}`; route through "
+                    "`repro.api` (or waive: # analysis: allow L001 (...))"))
+        return out
+
+
+@register
+class CompressionMutationRule(Rule):
+    rule_id = "L002"
+    family = "L"
+    severity = "error"
+    description = ("EngineConfig.compression mutated outside the facade "
+                   "(register a CompressionStrategy instead)")
+
+    def applies(self, path: str) -> bool:
+        return not _under(path, COMPRESSION_MUTATION_OK_PREFIXES)
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for fn_or_mod in ast.walk(tree):
+            body = getattr(fn_or_mod, "body", None)
+            if not isinstance(fn_or_mod, (ast.Module, ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                continue
+            # locals bound from EngineConfig(...) in this scope
+            ec_names = {"ec", "engine_cfg"}
+            for stmt in ast.walk(fn_or_mod):
+                if isinstance(stmt, ast.Assign) \
+                        and isinstance(stmt.value, ast.Call) \
+                        and isinstance(stmt.value.func, ast.Name) \
+                        and stmt.value.func.id == "EngineConfig":
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            ec_names.add(t.id)
+            for stmt in body or ():
+                for node in ast.walk(stmt):
+                    if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                        continue
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        if not (isinstance(t, ast.Attribute)
+                                and t.attr == "compression"):
+                            continue
+                        base = t.value
+                        is_ec = (isinstance(base, ast.Name)
+                                 and base.id in ec_names)
+                        is_ec = is_ec or (isinstance(base, ast.Attribute)
+                                          and base.attr in ec_names)
+                        is_ec = is_ec or (isinstance(base, ast.Call)
+                                          and isinstance(base.func, ast.Name)
+                                          and base.func.id == "EngineConfig")
+                        if is_ec:
+                            out.append(self.finding(
+                                path, node.lineno,
+                                "mutates EngineConfig.compression outside "
+                                "the facade; pass a CompressionStrategy / "
+                                "GenerationConfig.compression instead"))
+        return out
+
+
+@register
+class EngineConstructionRule(Rule):
+    rule_id = "L003"
+    family = "L"
+    severity = "error"
+    description = ("Engine constructed outside src/repro "
+                   "(use LVLM.serve / serve_async / serve_cluster)")
+
+    def applies(self, path: str) -> bool:
+        return not _under(path, ENGINE_CONSTRUCTION_OK_PREFIXES)
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "Engine":
+                out.append(self.finding(
+                    path, node.lineno,
+                    "constructs Engine directly; the public decode/serving "
+                    "surface is LVLM (decoder.engine_decode and "
+                    "CompressionStrategy run behind it)"))
+        return out

@@ -1,0 +1,297 @@
+"""The machine-readable API tables the rules check against.
+
+This is the single place where the repo's resource-lifecycle and
+layering conventions are written down as data: which calls/stores
+acquire a slot, draft row, or prefix pin; which calls release them;
+which attributes are loop-shared mutable state; which calls block an
+event loop. Rules interpret these tables -- adding a new resource or a
+new blocking call is a table edit, not a new rule.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------- matchers --
+# A site matcher is a predicate over one *statement*: it answers whether
+# the statement contains the acquire / release / handoff action.
+
+
+def _own_nodes(stmt: ast.stmt):
+    """Walk a statement's own expressions WITHOUT descending into nested
+    statements: a compound statement (if/for/while/try/with) matches only
+    on its header, since the statements in its body are separate CFG
+    nodes matched individually."""
+    stack: list = [stmt]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if not isinstance(child, ast.stmt):
+                stack.append(child)
+
+
+def _calls(stmt: ast.stmt):
+    for n in _own_nodes(stmt):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def call_named(*names: str) -> Callable[[ast.stmt], bool]:
+    """A call whose callee is ``name(...)`` or ``<expr>.name(...)``."""
+    def match(stmt: ast.stmt) -> bool:
+        for c in _calls(stmt):
+            f = c.func
+            if isinstance(f, ast.Name) and f.id in names:
+                return True
+            if isinstance(f, ast.Attribute) and f.attr in names:
+                return True
+        return False
+    return match
+
+
+def method_on(attr: str, *methods: str) -> Callable[[ast.stmt], bool]:
+    """A call ``<expr>.<attr>.<method>(...)``, e.g. _streams.pop(...)."""
+    def match(stmt: ast.stmt) -> bool:
+        for c in _calls(stmt):
+            f = c.func
+            if (isinstance(f, ast.Attribute) and f.attr in methods
+                    and isinstance(f.value, ast.Attribute)
+                    and f.value.attr == attr):
+                return True
+        return False
+    return match
+
+
+def store_subscript(attr: str,
+                    value_none: Optional[bool] = None
+                    ) -> Callable[[ast.stmt], bool]:
+    """An assignment ``<expr>.<attr>[k] = v`` (optionally requiring v to
+    be / not be ``None``), or ``del <expr>.<attr>[k]``."""
+    def match(stmt: ast.stmt) -> bool:
+        targets: Sequence[ast.expr] = ()
+        value: Optional[ast.expr] = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AugAssign):
+            targets, value = (stmt.target,), stmt.value
+        elif isinstance(stmt, ast.Delete):
+            targets = stmt.targets
+        for t in targets:
+            if (isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Attribute)
+                    and t.value.attr == attr):
+                if value_none is None or isinstance(stmt, ast.Delete):
+                    return True
+                is_none = (isinstance(value, ast.Constant)
+                           and value.value is None)
+                if is_none == value_none:
+                    return True
+        return False
+    return match
+
+
+def store_attr(attr: str,
+               value_none: Optional[bool] = None
+               ) -> Callable[[ast.stmt], bool]:
+    """An assignment ``<expr>.<attr> = v`` (optionally v is/isn't None)."""
+    def match(stmt: ast.stmt) -> bool:
+        if not isinstance(stmt, ast.Assign):
+            return False
+        for t in stmt.targets:
+            if isinstance(t, ast.Attribute) and t.attr == attr:
+                if value_none is None:
+                    return True
+                is_none = (isinstance(stmt.value, ast.Constant)
+                           and stmt.value.value is None)
+                if is_none == value_none:
+                    return True
+        return False
+    return match
+
+
+def del_subscript(attr: str) -> Callable[[ast.stmt], bool]:
+    """A ``del <expr>.<attr>[k]`` statement."""
+    def match(stmt: ast.stmt) -> bool:
+        if not isinstance(stmt, ast.Delete):
+            return False
+        for t in stmt.targets:
+            if (isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Attribute)
+                    and t.value.attr == attr):
+                return True
+        return False
+    return match
+
+
+def any_of(*matchers) -> Callable[[ast.stmt], bool]:
+    def match(stmt: ast.stmt) -> bool:
+        return any(m(stmt) for m in matchers)
+    return match
+
+
+# ------------------------------------------------------------- R: resources --
+@dataclasses.dataclass
+class Resource:
+    """One tracked resource kind for the R-rules.
+
+    ``acquire`` marks the acquire site; every CFG path through an
+    acquire (function entry -> acquire -> exit) must touch a ``release``
+    or ``handoff`` site -- ``handoff`` marks ownership transfer into
+    long-lived engine/server state that a later release function frees.
+    ``exempt_functions`` are the release functions themselves (their
+    internal stores must not count as acquires). ``module_pairing``
+    relaxes the per-function CFG walk to "the module must contain at
+    least one release site" for resources acquired and released in
+    different functions by design.
+    """
+    rid: str
+    description: str
+    path_suffixes: Tuple[str, ...]
+    acquire: Callable[[ast.stmt], bool]
+    release: Callable[[ast.stmt], bool]
+    handoff: Optional[Callable[[ast.stmt], bool]] = None
+    exempt_functions: Tuple[str, ...] = ()
+    module_pairing: bool = False
+
+
+RESOURCES = [
+    Resource(
+        rid="slot",
+        description="engine KV slot (Engine._free_slot -> slot_req bind, "
+                    "freed by Engine._release_request)",
+        path_suffixes=("core/serving/engine.py",),
+        acquire=call_named("_free_slot"),
+        release=call_named("_release_request"),
+        handoff=store_subscript("slot_req", value_none=False),
+    ),
+    Resource(
+        rid="prefix_pin",
+        description="prefix-cache pin (pin-count increment + "
+                    "Request._prefix_pin bind, freed by _release_request)",
+        path_suffixes=("core/serving/engine.py",),
+        acquire=store_subscript("_prefix_pins"),
+        release=any_of(call_named("_release_request"),
+                       method_on("_prefix_pins", "pop")),
+        handoff=store_attr("_prefix_pin", value_none=False),
+        exempt_functions=("_release_request",),
+    ),
+    Resource(
+        rid="retired_request",
+        description="request retirement (finished/aborted append must be "
+                    "paired with Engine._release_request on the same path)",
+        path_suffixes=("core/serving/engine.py",),
+        acquire=method_on("finished", "append"),
+        release=call_named("_release_request"),
+    ),
+    Resource(
+        rid="aborted_request",
+        description="request abort (aborted append must be paired with "
+                    "Engine._release_request on the same path)",
+        path_suffixes=("core/serving/engine.py",),
+        acquire=method_on("aborted", "append"),
+        release=call_named("_release_request"),
+    ),
+    Resource(
+        rid="stream",
+        description="server TokenStream registration (_streams bind, "
+                    "released by pop/del in abort/_drain/_fail)",
+        path_suffixes=("serving/server.py",),
+        acquire=store_subscript("_streams", value_none=False),
+        release=any_of(method_on("_streams", "pop"),
+                       del_subscript("_streams")),
+        module_pairing=True,
+    ),
+    Resource(
+        rid="router_inflight",
+        description="router inflight assignment (Replica.inflight bind, "
+                    "released by inflight.pop on retire/cancel/redispatch)",
+        path_suffixes=("cluster/router.py",),
+        acquire=store_subscript("inflight", value_none=False),
+        release=method_on("inflight", "pop"),
+        module_pairing=True,
+    ),
+    Resource(
+        rid="admission_waiter",
+        description="admission-gate waiter (deferred-queue append, "
+                    "released by remove/popleft)",
+        path_suffixes=("serving/admission.py",),
+        acquire=method_on("_waiters", "append"),
+        release=any_of(method_on("_waiters", "remove"),
+                       method_on("_waiters", "popleft")),
+        module_pairing=True,
+    ),
+]
+
+
+# R001: canonical release functions must contain EVERY release action of
+# the resources they free -- deleting any single one is a finding.
+@dataclasses.dataclass
+class ReleaseAction:
+    name: str
+    matcher: Callable[[ast.stmt], bool]
+
+
+RELEASE_COMPLETENESS = {
+    ("core/serving/engine.py", "_release_request"): [
+        ReleaseAction("slot-unbind (slot_req[slot] = None)",
+                      store_subscript("slot_req", value_none=True)),
+        ReleaseAction("draft-row release (decoder release_slot hook)",
+                      call_named("release", "release_slot")),
+        ReleaseAction("prefix-pin decrement/pop (_prefix_pins)",
+                      any_of(method_on("_prefix_pins", "pop"),
+                             store_subscript("_prefix_pins"))),
+        ReleaseAction("prefix-pin clear (request._prefix_pin = None)",
+                      store_attr("_prefix_pin", value_none=True)),
+    ],
+    ("serving/server.py", "abort"): [
+        ReleaseAction("engine abort (frees slot/draft row/gamma/pin)",
+                      method_on("engine", "abort")),
+        ReleaseAction("stream deregistration (_streams.pop)",
+                      method_on("_streams", "pop")),
+        ReleaseAction("admission drain (freed capacity wakes waiters)",
+                      method_on("admission", "maybe_admit")),
+    ],
+    ("cluster/router.py", "_retire"): [
+        ReleaseAction("router stream deregistration (_streams.pop)",
+                      method_on("_streams", "pop")),
+        ReleaseAction("replica inflight release (inflight.pop)",
+                      method_on("inflight", "pop")),
+    ],
+}
+
+
+# ---------------------------------------------------------- A: async tables --
+# Blocking calls that stall the event loop when issued inside async def.
+BLOCKING_CALLS = {
+    ("time", "sleep"), ("os", "system"), ("subprocess", "run"),
+    ("subprocess", "call"), ("subprocess", "check_call"),
+    ("subprocess", "check_output"), ("socket", "create_connection"),
+    ("requests", "get"), ("requests", "post"), ("urllib.request", "urlopen"),
+}
+
+# Shared mutable serving/cluster/engine state: a read-before-await plus
+# write-after-await of one of these in a single async function is an
+# interleaving hazard unless fenced with `# analysis: atomic-step`.
+SHARED_STATE_ATTRS = {
+    "_streams", "_waiters", "_draining", "inflight", "_prefix",
+    "_prefix_pins", "waiting", "running", "slot_req",
+}
+
+# Mutating method names that count as writes on those attributes.
+MUTATING_METHODS = {
+    "append", "remove", "pop", "popleft", "appendleft", "clear", "update",
+    "extend", "insert", "add", "discard", "move_to_end", "setdefault",
+}
+
+# ------------------------------------------------------- L: layering tables --
+# Path prefixes (relative to the repo root) that form the internal layer:
+# repro.core imports are allowed only here.
+INTERNAL_IMPORT_OK_PREFIXES = ("src/repro/", "tests/")
+
+# The facade layer allowed to touch EngineConfig.compression.
+COMPRESSION_MUTATION_OK_PREFIXES = ("src/repro/api/", "src/repro/core/")
+
+# Engine construction stays behind the facade outside the src tree.
+ENGINE_CONSTRUCTION_OK_PREFIXES = ("src/repro/", "tests/")

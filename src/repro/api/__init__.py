@@ -38,7 +38,9 @@ from repro.api.lvlm import LVLM, GenerationResult, ServeResult
 
 # re-exported internal-layer names commonly needed alongside the facade
 from repro.configs.base import CompressionConfig
-from repro.core.serving import EngineConfig, Request
+from repro.core.serving import (CostModel, EngineConfig, PoolConfig,
+                                Request, goodput, simulate_colocated,
+                                simulate_disaggregated)
 
 # async serving layer (repro.serving is facade-independent; re-exported
 # here so `LVLM.serve_async` callers get the config types from one place)
@@ -57,6 +59,8 @@ __all__ = [
     "COMPRESSION_PRESETS", "resolve_compression", "CompressionConfig",
     "CompressionStrategy", "make_compressor", "compressed_token_count",
     "EngineConfig", "Request",
+    "CostModel", "PoolConfig", "goodput",
+    "simulate_colocated", "simulate_disaggregated",
     "AsyncLVLMServer", "TokenStream", "AdmissionConfig", "MetricsRegistry",
     "Router", "ClusterMetrics", "ROUTING_POLICIES",
 ]

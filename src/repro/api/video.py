@@ -1,0 +1,18 @@
+"""``repro.api.video`` -- facade surface for video-token scheduling.
+
+The video-specific compression schedulers (temporal merge, LLaMA-VID,
+DyCoke ratios, Dynamic-VLM budgeting, FrameFusion) and the streaming KV
+eviction policy live in the internal layer; examples and user code
+import them from here so ``repro.core`` stays private (L001).  The
+generic per-request strategies remain ``repro.api.compressors``.
+"""
+from repro.core.kv_cache.selection import select_streaming
+from repro.core.token_compression.video import (
+    dycoke_ratio, dynamic_compress, frame_similarity, framefusion,
+    llama_vid_compress, temporal_merge)
+
+__all__ = [
+    "select_streaming",
+    "frame_similarity", "temporal_merge", "llama_vid_compress",
+    "dycoke_ratio", "dynamic_compress", "framefusion",
+]

@@ -95,6 +95,11 @@ class EngineConfig:
     prefix_block: int = 16               # reuse granularity (tokens)
     prefix_cap: int = 64                 # max cached prefixes (LRU-evicted)
     cost: CostModel = dataclasses.field(default_factory=CostModel)
+    # runtime sanitizer (repro.analysis.sanitizer): conservation asserts
+    # at step/abort boundaries -- slot table, draft-pool rows, prefix
+    # pins, kv accounting. None = follow the REPRO_SANITIZE env var
+    # (CI's smoke job sets it); True/False force it per engine.
+    sanitize: Optional[bool] = None
 
 
 class SamplingEngineDecoder:
@@ -285,6 +290,22 @@ class Engine:
         self._comp_counts: Dict[str, List[int]] = {}
         self._validate_compressor(self._default_comp_name, self.compressor)
 
+        # runtime sanitizer: resolved once (config wins over env)
+        if ec.sanitize is not None:
+            self.sanitize = bool(ec.sanitize)
+        else:
+            from repro.analysis.sanitizer import sanitize_enabled
+            self.sanitize = sanitize_enabled()
+
+    def _sanitize_check(self, where: str) -> None:
+        """Raise ``SanitizerError`` if a conservation invariant is
+        violated (slot/draft-row/pin/kv accounting; see
+        repro.analysis.sanitizer). Called at step and abort boundaries
+        when ``sanitize`` is on."""
+        from repro.analysis.sanitizer import (assert_conserved,
+                                              check_engine_conservation)
+        assert_conserved(self, check_engine_conservation, where)
+
     # ----------------------------------------------------------- decoders --
     def _validate_decoder(self, name: str, dec) -> None:
         if name in self._validated:
@@ -460,6 +481,8 @@ class Engine:
                     r.state = State.DONE
                     r.aborted = True
                     self.aborted.append(r)
+                    if self.sanitize:
+                        self._sanitize_check(f"Engine.abort(rid={rid})")
                     return True
         return False
 
@@ -770,6 +793,8 @@ class Engine:
                 self.finished.append(r)
                 self._release_request(r)
         self.running = [r for r in self.running if r.state != State.DONE]
+        if self.sanitize:
+            self._sanitize_check(f"Engine.step (iter {self.iters})")
         return True
 
     def run(self, max_iters: int = 100000) -> Dict:

@@ -133,6 +133,9 @@ class AdmissionController:
                 self.engine.abort(req.rid)
             else:
                 try:
+                    # analysis: atomic-step (removes only this coroutine's
+                    # own entry; no other waiter state is read or assumed
+                    # to be unchanged across the await)
                     self._waiters.remove(entry)
                 except ValueError:
                     pass

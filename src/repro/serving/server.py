@@ -154,6 +154,15 @@ class AsyncLVLMServer:
         self._pump_task: Optional[asyncio.Task] = None
         self._stopping = False
         self._pump_error: Optional[BaseException] = None
+        # runtime sanitizer (repro.analysis.sanitizer): follows the
+        # engine's resolved flag (EngineConfig.sanitize / REPRO_SANITIZE)
+        self.sanitize = bool(getattr(self.engine, "sanitize", False))
+
+    def _sanitize_check(self) -> None:
+        from repro.analysis.sanitizer import (assert_conserved,
+                                              check_server_conservation)
+        assert_conserved(self, check_server_conservation,
+                         "AsyncLVLMServer pump step")
 
     def _slack(self, req: Request) -> float:
         """SLO slack of a deferred request: its TTFT deadline (anchored at
@@ -271,6 +280,8 @@ class AsyncLVLMServer:
                 self._drain()
                 self._check_disconnects()
                 self.admission.maybe_admit()
+                if self.sanitize:
+                    self._sanitize_check()   # conservation at the boundary
                 if self.pacing == "wall":
                     # sleep the step's virtual duration in real time (the
                     # analytic per-step latency estimate), scaled; clients

@@ -1,0 +1,135 @@
+"""Resource-lifecycle audit of the abort/release paths, with the
+runtime sanitizer on (``EngineConfig(sanitize=True)``).
+
+These are the regression tests for ISSUE 6's resource audit: abort
+mid-chunked-prefill, abort of a speculative request, and prefix-pin
+accounting under shared prefixes must all return the engine to a
+conserved state -- and breaking ``_release_request`` must make the
+sanitizer trip (the dynamic twin of the R001 mutation tests in
+``test_analysis.py``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import SanitizerError
+from repro.api.decoders import SpeculativeDecoder
+from repro.configs import get_config
+from repro.core.serving import Engine, EngineConfig, Request
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    return cfg, model[0], model[1]
+
+
+def build_model(cfg):
+    from repro.models import build
+    model = build(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return list(rng.randint(1, cfg.vocab_size, size=n))
+
+
+def _assert_baseline(eng):
+    assert all(r is None for r in eng.slot_req), eng.slot_req
+    assert eng._prefix_pins == {}, eng._prefix_pins
+    assert eng.kv_committed_tokens() == 0
+    for dec in eng._decoders.values():
+        bound = getattr(dec, "bound_slots", None)
+        if bound is not None:
+            assert bound() == set()
+
+
+def test_abort_mid_chunked_prefill_returns_to_baseline(small):
+    cfg, model, params = small
+    eng = Engine(model, params, EngineConfig(
+        max_batch=2, cache_len=64, chunk_size=4, token_budget=8,
+        sanitize=True))
+    r = Request(rid=0, tokens=_prompt(cfg, 24), max_new_tokens=4)
+    eng.submit(r)
+    assert eng.step()                       # partial prefill: slot bound
+    assert any(s is not None for s in eng.slot_req)
+    assert eng.abort(0)                     # sanitizer runs inside abort
+    _assert_baseline(eng)
+    assert not eng.abort(0)                 # double-abort is a no-op
+
+
+def test_abort_speculative_request_frees_draft_row(small):
+    cfg, model, params = small
+    eng = Engine(model, params, EngineConfig(
+        max_batch=2, cache_len=64, sanitize=True))
+    eng._decoders["speculative"] = SpeculativeDecoder(gamma=2)
+    r = Request(rid=0, tokens=_prompt(cfg, 8), max_new_tokens=8,
+                decoder="speculative")
+    eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    dec = eng._decoders["speculative"]
+    assert eng.abort(0)
+    assert dec.bound_slots() == set()
+    _assert_baseline(eng)
+
+
+def test_prefix_pins_balance_with_shared_prefixes(small):
+    cfg, model, params = small
+    eng = Engine(model, params, EngineConfig(
+        max_batch=3, cache_len=96, prefix_cache=True, prefix_block=4,
+        sanitize=True))
+    shared = _prompt(cfg, 16, seed=3)
+    eng.submit(Request(rid=0, tokens=list(shared), max_new_tokens=3))
+    eng.run()                               # seeds the prefix cache
+    # two reuse requests + one aborted mid-flight
+    for rid in (1, 2):
+        eng.submit(Request(rid=rid, tokens=list(shared) + [rid],
+                           max_new_tokens=3))
+    eng.step()
+    eng.abort(1)                            # pin decremented, not leaked
+    eng.run()
+    _assert_baseline(eng)
+
+
+def test_mixed_decoder_run_conserves_under_sanitizer(small):
+    cfg, model, params = small
+    eng = Engine(model, params, EngineConfig(
+        max_batch=3, cache_len=64, chunk_size=8, sanitize=True))
+    eng._decoders["speculative"] = SpeculativeDecoder(gamma=2)
+    for i, dec in enumerate((None, "speculative", "greedy")):
+        eng.submit(Request(rid=i, tokens=_prompt(cfg, 6, seed=i),
+                           max_new_tokens=4, decoder=dec))
+    stats = eng.run()
+    assert len(eng.finished) == 3
+    _assert_baseline(eng)
+    assert stats is not None
+
+
+def test_broken_release_trips_sanitizer(small):
+    """Dynamic acceptance check: neuter _release_request and the very
+    first abort fails the conservation asserts."""
+    cfg, model, params = small
+    eng = Engine(model, params, EngineConfig(
+        max_batch=1, cache_len=64, sanitize=True))
+    eng.submit(Request(rid=0, tokens=_prompt(cfg, 8), max_new_tokens=8))
+    eng.step()
+    eng._release_request = lambda r: None   # the leak under test
+    with pytest.raises(SanitizerError, match="slot leak"):
+        eng.abort(0)
+
+
+def test_sanitize_env_var_enables(small, monkeypatch):
+    cfg, model, params = small
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    eng = Engine(model, params, EngineConfig(max_batch=1, cache_len=32))
+    assert eng.sanitize is True
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    eng = Engine(model, params, EngineConfig(max_batch=1, cache_len=32))
+    assert eng.sanitize is False
+    # explicit config wins over the env var
+    eng = Engine(model, params, EngineConfig(max_batch=1, cache_len=32,
+                                             sanitize=True))
+    assert eng.sanitize is True
