@@ -102,11 +102,45 @@ def check_engine_conservation(engine) -> List[str]:
                 f"decoder `{name}` draft-pool rows {sorted(leaked)} bound "
                 "to freed slots -- draft-row leak")
 
-    # prefix pins: counts == live pinning requests; pinned keys cached
+    # migration exports: every ticket pins a live MIGRATING request, and
+    # every pinned MIGRATING request has its ticket (the export pin is the
+    # acquire side of the migration protocol; complete/cancel_export are
+    # the only releases)
+    exports = dict(getattr(engine, "_exports", {}))
+    for rid, ticket in exports.items():
+        r = ticket.get("req")
+        if r is None or id(r) not in live_ids:
+            problems.append(
+                f"export ticket rid={rid} references a request no longer "
+                "live on this engine -- export pin leak")
+            continue
+        if r.state is not State.MIGRATING:
+            problems.append(
+                f"export ticket rid={rid} pinned but request state is "
+                f"{r.state} (expected MIGRATING)")
+        if engine.slot_req[ticket["slot"]] is not r:
+            problems.append(
+                f"export ticket rid={rid} slot {ticket['slot']} no longer "
+                "bound to the exporting request")
+    for r in live:
+        if (r.state is State.MIGRATING
+                and getattr(r, "_export_pin", None) is not None
+                and r.rid not in exports):
+            problems.append(
+                f"request rid={r.rid} MIGRATING with an export pin the "
+                "engine no longer tracks")
+
+    # prefix pins: counts == live pinning requests (export tickets count
+    # as holders: export_kv moves pin ownership to the ticket until the
+    # source release); pinned keys cached
     pins = dict(getattr(engine, "_prefix_pins", {}))
     holders = {}
     for r in live:
         key = getattr(r, "_prefix_pin", None)
+        if key is not None:
+            holders[key] = holders.get(key, 0) + 1
+    for ticket in exports.values():
+        key = ticket.get("prefix_pin")
         if key is not None:
             holders[key] = holders.get(key, 0) + 1
     for key, n in pins.items():

@@ -175,7 +175,22 @@ RESOURCES = [
         release=any_of(call_named("_release_request"),
                        method_on("_prefix_pins", "pop")),
         handoff=store_attr("_prefix_pin", value_none=False),
-        exempt_functions=("_release_request",),
+        # complete_export decrements a TICKET-owned pin: it is a release
+        # function for migration state, like _release_request
+        exempt_functions=("_release_request", "complete_export"),
+    ),
+    Resource(
+        rid="migration_export",
+        description="KV-migration export ticket (_exports bind pins the "
+                    "source slot + request, released by complete_export/"
+                    "cancel_export popping the ticket)",
+        path_suffixes=("core/serving/engine.py",),
+        acquire=store_subscript("_exports", value_none=False),
+        release=method_on("_exports", "pop"),
+        # the export pin is BORN to outlive its function: export_kv pins,
+        # a sibling imports, complete/cancel_export release -- pairing is
+        # a module property, enforced per-action by R001 below
+        module_pairing=True,
     ),
     Resource(
         rid="retired_request",
@@ -252,6 +267,17 @@ RELEASE_COMPLETENESS = {
                       method_on("_streams", "pop")),
         ReleaseAction("admission drain (freed capacity wakes waiters)",
                       method_on("admission", "maybe_admit")),
+    ],
+    ("core/serving/engine.py", "complete_export"): [
+        ReleaseAction("export-ticket pop (_exports.pop)",
+                      method_on("_exports", "pop")),
+        ReleaseAction("running-list removal (running.remove)",
+                      method_on("running", "remove")),
+        ReleaseAction("source-slot unbind (slot_req[slot] = None)",
+                      store_subscript("slot_req", value_none=True)),
+        ReleaseAction("ticket prefix-pin decrement/pop (_prefix_pins)",
+                      any_of(method_on("_prefix_pins", "pop"),
+                             store_subscript("_prefix_pins"))),
     ],
     ("cluster/router.py", "_retire"): [
         ReleaseAction("router stream deregistration (_streams.pop)",

@@ -349,6 +349,8 @@ class LVLM:
                       gen: Optional[GenerationConfig] = None, *,
                       routing="round_robin", draft: Optional["LVLM"] = None,
                       admission=None, compressors=None,
+                      roles: Optional[Sequence[str]] = None,
+                      shared_prefix: Optional[bool] = None,
                       pacing: str = "virtual",
                       pacing_scale: float = 1.0,
                       disconnect_timeout_s: Optional[float] = None
@@ -371,6 +373,13 @@ class LVLM:
 
         ``routing`` is a ``repro.cluster.ROUTING_POLICIES`` name
         (round_robin | least_kv | prefix_affinity) or a policy instance.
+
+        ``roles`` disaggregates the fleet (unified | prefill | decode,
+        one per replica; a per-replica spec dict may carry a ``"role"``
+        key instead): prefill replicas hand post-compression KV to
+        decode replicas over the modeled KV link. ``shared_prefix``
+        promotes the per-replica prefix caches to one cluster-shared
+        radix tier (default: exactly when the fleet is role-split).
         Pacing/disconnect knobs apply to every replica (see
         ``serve_async``). With one replica the router streams are
         bit-identical to the bare server's.
@@ -385,12 +394,19 @@ class LVLM:
             specs = [dict(s) for s in replicas]
             if not specs:
                 raise ValueError("serve_cluster needs at least one replica")
+        if roles is not None and len(roles) != len(specs):
+            raise ValueError(f"roles has {len(roles)} entries for "
+                             f"{len(specs)} replicas")
+        rep_roles = list(roles) if roles is not None \
+            else ["unified"] * len(specs)
         servers = []
-        for spec in specs:
+        for i, spec in enumerate(specs):
             unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission",
-                                   "compressors"}
+                                   "compressors", "role"}
             if unknown:
                 raise ValueError(f"unknown replica spec keys: {unknown}")
+            if "role" in spec:
+                rep_roles[i] = spec["role"]
             servers.append(self.serve_async(
                 spec.get("engine_cfg", engine_cfg),
                 spec.get("gen", gen),
@@ -399,4 +415,5 @@ class LVLM:
                 compressors=spec.get("compressors", compressors),
                 pacing=pacing, pacing_scale=pacing_scale,
                 disconnect_timeout_s=disconnect_timeout_s))
-        return Router(servers, routing=routing)
+        return Router(servers, routing=routing, roles=rep_roles,
+                      shared_prefix=shared_prefix)

@@ -30,6 +30,14 @@ Three planes over the serving layer:
                throughput vs the slowest replica's clock, per-replica
                dispatch/health, aggregate prefix hits.
 
+Disaggregated serving (roles): ``serve_cluster(..., roles=["prefill",
+"decode"])`` splits the fleet -- prefill replicas run the vision encoder
++ chunked prefill and hand the post-compression KV to decode replicas
+over the modeled KV link (``prefix_tier.py`` adds the cluster-shared
+radix prefix tier so a prefix cached anywhere short-circuits prefill
+everywhere); ``Router.drain`` migrates live KV the same way instead of
+merely refusing new work.
+
 SLO-aware dispatch composes from the serving layer: give each replica
 ``AdmissionConfig(order="slack")`` and its deferred queue drains
 earliest-TTFT-deadline-first (deadline minus the live expected TTFT from
@@ -44,10 +52,12 @@ from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.policies import (LeastKVPolicy, PrefixAffinityPolicy,
                                     ROUTING_POLICIES, RoundRobinPolicy,
                                     make_policy)
-from repro.cluster.router import Replica, Router, RouterStream
+from repro.cluster.prefix_tier import SharedPrefixTier
+from repro.cluster.router import ROLES, Replica, Router, RouterStream
 
 __all__ = [
     "Router", "Replica", "RouterStream", "ClusterMetrics",
+    "ROLES", "SharedPrefixTier",
     "ROUTING_POLICIES", "make_policy",
     "RoundRobinPolicy", "LeastKVPolicy", "PrefixAffinityPolicy",
 ]

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+import numpy as np
+
 from repro.serving.metrics import MetricsRegistry
 
 
@@ -35,15 +37,44 @@ class ClusterMetrics:
         for rep in self.router.replicas:
             eng = rep.server.engine
             s = rep.server.metrics.summary(eng)
-            s.update(state=rep.state, dispatched=rep.dispatched,
+            s.update(state=rep.state, role=rep.role,
+                     dispatched=rep.dispatched,
                      completed=rep.completed, kv_load=rep.kv_load(),
                      admitted=rep.server.admission.admitted,
                      deferred=rep.server.admission.deferrals,
                      disconnects=rep.server.disconnects,
+                     migrated_in=rep.migrated_in,
+                     migrated_out=rep.migrated_out,
                      error=repr(rep.error) if rep.error else None)
             if eng.ec.prefix_cache:
                 s["prefix_hit_tokens"] = eng.prefix_hit_tokens
+                s["remote_prefix_hits"] = eng.remote_prefix_hits
             out.append(s)
+        return out
+
+    def disaggregation(self) -> Dict:
+        """Fleet TTFT split for migrated requests: time-to-first-token on
+        the prefill side, the modeled KV-link transfer, and per-replica
+        migration counts. Empty counters mean no KV ever moved."""
+        moves = self.router.migrations
+        prefills = [m["prefill_s"] for m in moves
+                    if m.get("prefill_s") is not None]
+        transfers = [m["transfer_s"] for m in moves]
+        out: Dict = {
+            "migrations": len(moves),
+            "migrated_kv_tokens": sum(m["kv_tokens"] for m in moves),
+            "prefill_s_mean": float(np.mean(prefills)) if prefills
+            else None,
+            "transfer_s_mean": float(np.mean(transfers)) if transfers
+            else None,
+            "migrated_in_by_replica": [rep.migrated_in
+                                       for rep in self.router.replicas],
+            "migrated_out_by_replica": [rep.migrated_out
+                                        for rep in self.router.replicas],
+        }
+        tier = self.router.prefix_tier
+        if tier is not None:
+            out["prefix_tier"] = tier.stats()
         return out
 
     def summary(self) -> Dict:
@@ -51,6 +82,7 @@ class ClusterMetrics:
         out = self.merged_registry().summary()
         out["replicas"] = len(reps)
         out["replica_states"] = [rep.state for rep in reps]
+        out["replica_roles"] = [rep.role for rep in reps]
         out["dispatched_by_replica"] = [rep.dispatched for rep in reps]
         out["completed_by_replica"] = [rep.completed for rep in reps]
         out["failovers"] = self.router.failovers
@@ -69,4 +101,7 @@ class ClusterMetrics:
                 out["tokens"] / out["virtual_time_s"])
         out["prefix_hit_tokens"] = sum(
             rep.server.engine.prefix_hit_tokens for rep in reps)
+        if self.router.migrations or any(rep.role != "unified"
+                                         for rep in reps):
+            out["disaggregation"] = self.disaggregation()
         return out

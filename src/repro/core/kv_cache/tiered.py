@@ -17,6 +17,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.roofline.hw import KV_LINK_GBPS
+
 
 @dataclasses.dataclass
 class TierStats:
@@ -25,8 +27,9 @@ class TierStats:
     fetches: int = 0
     offloads: int = 0
 
-    def transfer_seconds(self, gbps: float = 32.0) -> float:
-        """Total PCIe time at ``gbps`` GB/s (v5e host link class)."""
+    def transfer_seconds(self, gbps: float = KV_LINK_GBPS) -> float:
+        """Total transfer time at ``gbps`` GB/s (shared KV-link constant
+        from repro.roofline.hw; pass ``gbps`` to model a different link)."""
         return (self.bytes_to_host + self.bytes_to_hbm) / (gbps * 1e9)
 
 

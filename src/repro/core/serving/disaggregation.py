@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.serving.request import Request, summarize
+from repro.roofline.hw import KV_LINK_GBPS
 
 
 @dataclasses.dataclass
@@ -25,7 +26,7 @@ class CostModel:
     decode_us_per_token: float = 800.0     # memory-bound (one step, whole batch)
     decode_us_per_ctx_token: float = 0.002  # cache-read component per ctx token
     kv_bytes_per_token: int = 0            # transfer size for disaggregation
-    transfer_gbps: float = 20.0            # inter-pool link
+    transfer_gbps: float = KV_LINK_GBPS    # inter-pool link (GB/s, shared hw constant)
 
     def prefill_time(self, n_tokens: int) -> float:
         return self.prefill_us_per_token * n_tokens * 1e-6

@@ -251,6 +251,20 @@ class Engine:
         self._prefix_pins: Dict[Tuple[str, Tuple[int, ...]], int] = {}
         self.prefix_hit_tokens = 0
         self.prefix_total_tokens = 0
+        # cluster-shared prefix tier (duck-typed: lookup/insert; installed
+        # by repro.cluster so a prefix cached on ANY replica short-circuits
+        # prefill here). Remote hits are installed locally and pay one
+        # modeled KV-link transfer on this engine's clock.
+        self.prefix_share = None
+        self.remote_prefix_hits = 0
+        self._iter_transfer_cost = 0.0
+        # live KV migration (disaggregated serving): rid -> export ticket.
+        # The ticket owns the source slot and any prefix pin from
+        # ``export_kv`` until ``complete_export`` (source release) or
+        # ``cancel_export`` (ownership back to the request).
+        self._exports: Dict[int, Dict] = {}
+        self.migrated_in = 0
+        self.migrated_out = 0
 
         self._jit_prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, cache_len=ec.cache_len,
@@ -434,7 +448,14 @@ class Engine:
             la = max(la, int(getattr(dec, "lookahead_tokens", 0)))
         self._stamp_compressed_nv(req)
         bs = self._kv_block()
-        need = req.kv_prompt_len + req.max_new_tokens + la
+        if req.handoff and not getattr(req, "_imported", False):
+            # prefill-role accounting: a handoff request decodes on the
+            # importing engine -- this pool only ever holds its prompt KV
+            # plus the first token, so reserving max_new here would let
+            # one video burst starve the prefill replica's admission
+            need = req.kv_prompt_len + 1
+        else:
+            need = req.kv_prompt_len + req.max_new_tokens + la
         return ((need + bs - 1) // bs) * bs
 
     def kv_committed_tokens(self, include_waiting: bool = True) -> int:
@@ -486,6 +507,149 @@ class Engine:
                     return True
         return False
 
+    # ---------------------------------------------------------- migration --
+    # Live KV migration protocol (disaggregated prefill/decode, drain):
+    #   export_kv (source pin) -> import_kv (target commit) ->
+    #   complete_export (source release), or cancel_export to back out.
+    # The exporting request stays in ``running`` in State.MIGRATING and
+    # keeps its slot until the source release, so a target-side failure
+    # before commit loses nothing (exactly-once: the request either
+    # resumes here via cancel_export or decodes exactly once over there).
+
+    def can_export(self, req: Request) -> bool:
+        """True when this engine can hand the request's KV to a sibling:
+        compacted caches are request-specific (position-masked rings) and
+        decoders with per-slot state (speculative draft-pool rows) cannot
+        be rebuilt from a bare KV snapshot on the importing side."""
+        if self.compacting:
+            return False
+        _, dec = self._resolve_decoder(req.decoder)
+        return getattr(dec, "release_slot", None) is None
+
+    def export_kv(self, rid: int) -> Dict:
+        """Pin a live request for migration and snapshot its KV.
+
+        Returns the export ticket: the host-side snapshot of the slot's
+        cache up to the current position plus the per-slot cursors and the
+        source clock (the transfer-time anchor). The ticket owns the
+        source slot and any prefix pin until ``complete_export`` /
+        ``cancel_export``; the request stops decoding here (MIGRATING)."""
+        req = next((r for r in self.running
+                    if r.rid == rid
+                    and r.state in (State.DECODE, State.MIGRATING)), None)
+        if req is None:
+            raise KeyError(f"export_kv: rid {rid} is not migratable here")
+        if rid in self._exports:
+            raise RuntimeError(f"export_kv: rid {rid} already has an "
+                               "export pin")
+        if not self.can_export(req):
+            raise RuntimeError(
+                f"export_kv: rid {rid} is not exportable (compacted cache "
+                "or per-slot decoder state)")
+        slot = req._slot
+        pos = int(self.slot_pos[slot])
+        snap = jax.tree.map(lambda a: a[:, :, :pos],
+                            _slot_get(self.pool, slot))
+        ticket = {
+            "rid": rid, "req": req, "snap": snap, "pos": pos,
+            "last_tok": int(self.slot_last_tok[slot]),
+            "nv": int(self.slot_nv[slot]),
+            "slot": slot, "clock": self.clock,
+            "prefix_pin": getattr(req, "_prefix_pin", None),
+        }
+        # pin ownership moves to the ticket: the target never inherits the
+        # source's prefix pin, and the source release must still find it
+        # after the target overwrites the request's slot binding
+        req._prefix_pin = None
+        req._export_pin = rid
+        req.state = State.MIGRATING
+        self._exports[rid] = ticket
+        return ticket
+
+    def complete_export(self, rid: int) -> None:
+        """Source-side release of a migrated request: the importing engine
+        has committed, so free everything the export ticket owns -- the
+        slot (and any decoder per-slot row), the prefix pin, and the
+        running-list entry. Never touches ``req.state``: the importing
+        engine owns the request now."""
+        ticket = self._exports.pop(rid)
+        req = ticket["req"]
+        self.running.remove(req)
+        slot = ticket["slot"]
+        if self.slot_req[slot] is req:
+            self.slot_req[ticket["slot"]] = None
+            for dec in self._decoders.values():
+                release = getattr(dec, "release_slot", None)
+                if release is not None:
+                    release(slot)
+        key = ticket["prefix_pin"]
+        if key is not None:
+            n = self._prefix_pins.get(key, 0) - 1
+            if n > 0:
+                self._prefix_pins[key] = n
+            else:
+                self._prefix_pins.pop(key, None)
+        req._export_pin = None
+        self.migrated_out += 1
+        if self.sanitize:
+            self._sanitize_check(f"Engine.complete_export(rid={rid})")
+
+    def cancel_export(self, rid: int) -> None:
+        """Back out an export (no sibling could import): the request
+        resumes decoding HERE -- pin ownership returns to it, and its
+        handoff flag clears so KV accounting covers the in-place decode."""
+        ticket = self._exports.pop(rid, None)
+        if ticket is None:
+            return
+        req = ticket["req"]
+        req._prefix_pin = ticket["prefix_pin"]
+        req._export_pin = None
+        req.handoff = False
+        req.state = State.DECODE
+        if self.sanitize:
+            self._sanitize_check(f"Engine.cancel_export(rid={rid})")
+
+    def import_kv(self, req: Request, ticket: Dict, *,
+                  ready_at: float = 0.0) -> None:
+        """Import-commit side of a migration: bind a free slot, restore
+        the exported KV snapshot and per-slot cursors, and resume the
+        request in DECODE. Its first decode step here is gated on
+        ``ready_at`` (source export clock + modeled KV-link transfer), so
+        the transfer cost lands on this engine's virtual clock before the
+        request's next token. Raises when no slot is free or the snapshot
+        cannot fit -- the caller still holds the source pin and may try a
+        sibling or cancel."""
+        if self.compacting:
+            raise RuntimeError("import_kv: compacting engines cannot host "
+                               "migrated KV (position-masked caches)")
+        if any(r.rid == req.rid for r in self.running + self.waiting):
+            raise ValueError(f"import_kv: rid {req.rid} already live here")
+        name, _dec = self._resolve_decoder(req.decoder)
+        self._used_decoders.add(name)
+        cname, _comp = self._resolve_compressor(req.compression)
+        req._comp_name = cname
+        pos = int(ticket["pos"])
+        remaining = req.max_new_tokens - len(req.generated)
+        if pos + remaining > self.ec.cache_len - 1:
+            raise ValueError(
+                f"import_kv: rid {req.rid} needs {pos + remaining} tokens; "
+                f"cache_len-1 = {self.ec.cache_len - 1} available")
+        slot = self._free_slot()
+        req._slot = slot
+        self.slot_req[slot] = req
+        self._install_snap(slot, ticket["snap"])
+        self.slot_pos[slot] = pos
+        self.slot_last_tok[slot] = ticket["last_tok"]
+        self.slot_nv[slot] = ticket["nv"]
+        req._imported = True
+        req._ready_at = max(self.clock, ready_at)
+        req.state = State.DECODE
+        req.prefill_done = len(req.tokens)
+        self.migrated_in += 1
+        self.running.append(req)
+        if self.sanitize:
+            self._sanitize_check(f"Engine.import_kv(rid={req.rid})")
+
     # ------------------------------------------------------------- prefix --
     def _prefix_variant(self, name: Optional[str]) -> str:
         """Compression-variant component of every prefix-cache key: the
@@ -509,12 +673,27 @@ class Engine:
         bs = self.ec.prefix_block
         v = self._prefix_variant(variant)
         t = tuple(tokens)
+        best_k, best = 0, None
         for k in range((len(t) // bs) * bs, 0, -bs):
             hit = self._prefix.get((v, t[:k]))
             if hit is not None:
+                best_k, best = k, hit
+                break
+        if self.prefix_share is not None:
+            rk, rsnap = self.prefix_share.lookup(v, t, block=bs, touch=touch)
+            if rk > best_k:
+                # remote hit beats the local one: install it locally (one
+                # modeled KV-link transfer, charged to this step's clock)
+                # so later lookups here are local
                 if touch:
-                    self._prefix.move_to_end((v, t[:k]))
-                return k, hit
+                    self._prefix_store((v, t[:rk]), rsnap, rk)
+                    self._iter_transfer_cost += self.ec.cost.transfer_time(rk)
+                    self.remote_prefix_hits += 1
+                return rk, (rsnap, rk)
+        if best is not None:
+            if touch:
+                self._prefix.move_to_end((v, t[:best_k]))
+            return best_k, best
         return 0, None
 
     def _prefix_insert(self, tokens: List[int], slot: int, length: int,
@@ -528,6 +707,18 @@ class Engine:
             self._prefix.move_to_end(key)            # re-insert = LRU touch
             return
         snap = jax.tree.map(lambda a: a[:, :, :k], _slot_get(self.pool, slot))
+        self._prefix_store(key, snap, k)
+        if self.prefix_share is not None:
+            # publish to the cluster-shared tier: a sibling replica's next
+            # prefill of this prefix short-circuits via the tier
+            self.prefix_share.insert(key[0], key[1], snap, k)
+
+    def _prefix_store(self, key: Tuple, snap, k: int) -> None:
+        """Insert an entry into the LOCAL prefix cache with LRU eviction
+        (shared by local inserts and shared-tier hit installs)."""
+        if key in self._prefix:
+            self._prefix.move_to_end(key)
+            return
         self._prefix[key] = (snap, k)
         while len(self._prefix) > self.ec.prefix_cap:
             # least-recent UNPINNED entry; pinned ones (a live request hit
@@ -663,8 +854,16 @@ class Engine:
             req.generated.append(tok)
             req._needs_ttft = True
             self.slot_last_tok[slot] = tok
-            req.state = (State.DONE if req.is_finished()
-                         or tok == ec.eos_id else State.DECODE)
+            if req.is_finished() or tok == ec.eos_id:
+                req.state = State.DONE
+            elif req.handoff and self.can_export(req):
+                # disaggregated prefill: park for KV export (the serving
+                # layer migrates it to a decode replica) instead of
+                # entering this engine's decode loop
+                req.state = State.MIGRATING
+            else:
+                req.handoff = False       # not exportable: decode in place
+                req.state = State.DECODE
             if req in self.waiting:
                 self.waiting.remove(req)
             self.running.append(req)
@@ -758,24 +957,32 @@ class Engine:
         self.running = [r for r in self.running if r.state != State.DONE]
         visible = [r for r in self.waiting if r.arrival <= self.clock]
         plan = self.sched.plan(visible, self.running)
-        if not plan.prefill and not plan.decode:
+        # decode only requests whose KV is resident AND ready: an imported
+        # request waits out its modeled transfer (``_ready_at``) first, a
+        # MIGRATING request is frozen until export completes or cancels
+        decode_reqs = [r for r in plan.decode if r.state == State.DECODE
+                       and getattr(r, "_ready_at", 0.0) <= self.clock]
+        if not plan.prefill and not decode_reqs:
             future = [r.arrival for r in self.waiting
                       if r.arrival > self.clock]
-            if future:                  # idle until the next arrival
+            future += [r._ready_at for r in self.running
+                       if r.state == State.DECODE
+                       and getattr(r, "_ready_at", 0.0) > self.clock]
+            if future:                  # idle until arrival / KV readiness
                 self.clock = min(future)
                 return True
             return False
         self._iter_visual_tokens = 0
+        self._iter_transfer_cost = 0.0    # shared-prefix-tier installs
         for req, n in plan.prefill:
             self._do_prefill_chunk(req, n)
-        decode_reqs = [r for r in plan.decode if r.state == State.DECODE]
         self._iter_decode_cost = 0.0      # summed per strategy group
         if decode_reqs:
             self._decode_iteration(decode_reqs)
         # virtual clock
         dt = self.ec.cost.prefill_time(plan.prefill_tokens
                                        + self._iter_visual_tokens)
-        dt += self._iter_decode_cost
+        dt += self._iter_decode_cost + self._iter_transfer_cost
         self.clock += dt
         self.iters += 1
         # stamp times & retire

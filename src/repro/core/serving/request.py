@@ -12,6 +12,7 @@ class State(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"          # (possibly chunked) prompt processing
     DECODE = "decode"
+    MIGRATING = "migrating"      # KV export pinned, awaiting import elsewhere
     PREEMPTED = "preempted"
     DONE = "done"
 
@@ -48,6 +49,12 @@ class Request:
     # ahead of the committed stream, so its slots need gamma slack).
     # Schedulers account it when admitting against KV capacity.
     lookahead: int = 0
+    # disaggregated serving (survey dim 2c-ii): a handoff request runs
+    # prefill on THIS engine but decodes elsewhere -- after the first token
+    # it parks in MIGRATING instead of entering DECODE, and the KV snapshot
+    # is exported to a decode-role replica. Its KV reservation here covers
+    # only the prompt (plus the first token), not max_new_tokens.
+    handoff: bool = False
 
     # runtime state ---------------------------------------------------------
     state: State = State.WAITING

@@ -25,6 +25,13 @@ through the unified ``repro.api`` facade.
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
         --routing prefix_affinity --prefix-cache --shared-prefix 32 \
         --open-loop 2000 --admission-order slack
+
+    # disaggregated prefill/decode fleet: prefill replicas run the
+    # vision encoder + chunked prefill, hand post-compression KV to
+    # decode replicas over the modeled KV link (--roles implies the
+    # replica count; the report adds a "disaggregation" block):
+    PYTHONPATH=src python -m repro.launch.serve \
+        --roles prefill:2,decode:2 --open-loop 2000
 """
 from __future__ import annotations
 
@@ -55,6 +62,19 @@ def synth_requests(cfg, n, *, seed=0, prompt_lo=16, prompt_hi=48,
         reqs.append(Request(rid=i, tokens=toks, max_new_tokens=new_tokens,
                             visual_embeds=ve, arrival=i * 0.01))
     return reqs
+
+
+def parse_roles(spec):
+    """``'prefill:2,decode:2'`` (or a bare list ``'prefill,decode'``)
+    into the per-replica role list ``serve_cluster`` expects."""
+    roles = []
+    for part in str(spec).split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, count = part.partition(":")
+        roles.extend([name.strip()] * (int(count) if count else 1))
+    return roles
 
 
 def main() -> int:
@@ -96,6 +116,12 @@ def main() -> int:
     ap.add_argument("--replicas", type=int, default=1,
                     help="async server replicas behind a cluster Router "
                          "(>1 forces the async path)")
+    ap.add_argument("--roles", default=None, metavar="SPEC",
+                    help="disaggregated fleet roles, e.g. "
+                         "'prefill:2,decode:2' or 'prefill,decode' "
+                         "(implies the replica count and the async "
+                         "cluster path; prefill replicas hand "
+                         "post-compression KV to decode replicas)")
     ap.add_argument("--routing", default="round_robin",
                     choices=sorted(ROUTING_POLICIES),
                     help="cluster routing policy (with --replicas > 1)")
@@ -152,10 +178,13 @@ def main() -> int:
     adm = AdmissionConfig(high_watermark=args.high_watermark,
                           low_watermark=args.low_watermark,
                           order=args.admission_order)
+    roles = parse_roles(args.roles) if args.roles else None
+    if roles:
+        args.replicas = len(roles)
     if args.open_loop > 0 or args.replicas > 1:
         front = lvlm.serve_cluster(
             args.replicas, ec, gen=gen, routing=args.routing,
-            admission=adm, pacing=args.pacing,
+            roles=roles, admission=adm, pacing=args.pacing,
             pacing_scale=args.pacing_scale,
             disconnect_timeout_s=args.disconnect_timeout) \
             if args.replicas > 1 else lvlm.serve_async(

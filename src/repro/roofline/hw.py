@@ -20,3 +20,9 @@ TPU_V5E = HW(
     ici_bw=50e9,                # ~50 GB/s per ICI link
     hbm_bytes=16e9,             # 16 GB HBM
 )
+
+# Inter-pool KV link bandwidth in GB/s: the one number every KV-movement
+# model shares (tiered-cache host offload, disaggregated prefill->decode
+# transfer, cluster prefix-tier installs). DCN-class, deliberately below
+# ici_bw -- KV migration crosses pool boundaries, not the ICI mesh.
+KV_LINK_GBPS = 32.0

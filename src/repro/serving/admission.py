@@ -66,8 +66,11 @@ class AdmissionController:
     def __init__(self, cfg: AdmissionConfig, engine):
         self.cfg = cfg
         self.engine = engine
-        self._waiters: Deque[Tuple[asyncio.Future, object, int]] = \
-            collections.deque()
+        # (future, request, kv need, commit callable) -- the commit is
+        # what admission runs once the request fits: Engine.submit for a
+        # fresh request, Engine.import_kv for a migrated-in one
+        self._waiters: Deque[Tuple[asyncio.Future, object, int, Callable]] \
+            = collections.deque()
         self._draining = False          # blocked until usage <= low mark
         self.admitted = 0
         self.deferrals = 0              # submits that had to wait
@@ -100,27 +103,35 @@ class AdmissionController:
         return len(self._waiters)
 
     # ------------------------------------------------------------- gate --
-    async def admit(self, req) -> bool:
-        """Submit ``req`` to the engine, awaiting under backpressure.
+    async def admit(self, req, submit: Optional[Callable] = None) -> bool:
+        """Commit ``req`` into the engine, awaiting under backpressure.
 
-        Returns True once ``Engine.submit(req)`` has run, False if the
-        waiter was retracted via ``cancel`` (the request never entered
-        the engine). Oversized single requests (which can NEVER fit a
-        slot) still raise ``ValueError`` from the engine -- backpressure
-        is for aggregate pool pressure, not impossible requests.
+        ``submit`` is the commit callable gated by the watermarks --
+        ``Engine.submit`` by default; the serving layer passes
+        ``Engine.import_kv`` (bound to a migration ticket) for a
+        migrated-in request so KV imports respect the same pressure
+        limits as fresh admissions.
+
+        Returns True once the commit has run, False if the waiter was
+        retracted via ``cancel`` (the request never entered the engine).
+        Oversized single requests (which can NEVER fit a slot) still
+        raise ``ValueError`` from the engine -- backpressure is for
+        aggregate pool pressure, not impossible requests.
         """
+        if submit is None:
+            submit = self.engine.submit
         need = self.engine.kv_request_tokens(req)
         if not (self.engine.waiting or self.engine.running):
             self._draining = False      # idle engine: hysteresis is stale
         if not self._waiters and not self._draining and self._can_admit(need):
-            self.engine.submit(req)
+            submit(req)
             self.admitted += 1
             return True
         self.deferrals += 1
         self._draining = True
         req._gate_clock = self.engine.clock   # deadline anchor for slack
         fut = asyncio.get_running_loop().create_future()
-        entry = (fut, req, need)
+        entry = (fut, req, need, submit)
         self._waiters.append(entry)
         try:
             # maybe_admit() submits before resolving True; cancel()
@@ -146,7 +157,7 @@ class AdmissionController:
         admission). The awaiting ``admit`` returns False; the request
         never reaches ``Engine.submit``."""
         for entry in list(self._waiters):
-            fut, r, _need = entry
+            fut, r = entry[0], entry[1]
             if r is req:
                 self._waiters.remove(entry)
                 if not fut.done():
@@ -155,7 +166,8 @@ class AdmissionController:
                 return True
         return False
 
-    def _drain_order(self) -> List[Tuple[asyncio.Future, object, int]]:
+    def _drain_order(self) -> List[Tuple[asyncio.Future, object, int,
+                                         Callable]]:
         """Waiters in admission order: FIFO, or smallest ``order_key``
         first (stable, so equal-slack waiters keep arrival order)."""
         if self.order_key is None:
@@ -177,7 +189,7 @@ class AdmissionController:
             return 0
         n = 0
         for entry in self._drain_order():
-            fut, req, need = entry
+            fut, req, need, submit = entry
             if fut.cancelled():
                 self._waiters.remove(entry)
                 continue
@@ -185,7 +197,7 @@ class AdmissionController:
                 break
             self._waiters.remove(entry)
             try:
-                eng.submit(req)    # submit BEFORE resolving: accounting is
+                submit(req)        # commit BEFORE resolving: accounting is
             except Exception as exc:   # impossible request (can never fit
                 # a slot): surface to ITS caller, exactly like the
                 # fast-path submit would -- never into the pump, which
@@ -202,7 +214,7 @@ class AdmissionController:
     def cancel_waiters(self) -> None:
         """Fail every pending waiter (server shutdown without drain)."""
         while self._waiters:
-            fut, _req, _need = self._waiters.popleft()
+            fut = self._waiters.popleft()[0]
             if not fut.done():
                 fut.set_exception(
                     RuntimeError("server stopped before admission"))

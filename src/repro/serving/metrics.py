@@ -44,8 +44,18 @@ class MetricsRegistry:
     ``LVLM.serve_async(metrics=...)`` to aggregate across servers.
     """
 
-    def __init__(self):
+    #: Default cold-start TTFT estimate (seconds). Before any request
+    #: finishes there is no TTFT history, and returning 0.0 made EDF
+    #: ``order="slack"`` maximally optimistic for the whole first wave --
+    #: every waiter looked like it had a full SLO of slack, so the first
+    #: drain order ignored imminent deadlines entirely. A small positive
+    #: prior (half a typical TTFT SLO) keeps cold-start ordering sane and
+    #: washes out as soon as real records arrive.
+    DEFAULT_TTFT_PRIOR = 0.25
+
+    def __init__(self, ttft_prior: float = DEFAULT_TTFT_PRIOR):
         self.records: List[RequestRecord] = []
+        self.ttft_prior = float(ttft_prior)
         self._expected_ttft: Optional[float] = None   # cache, see below
 
     def observe(self, req: Request, *, queue_wait: float = 0.0,
@@ -64,15 +74,16 @@ class MetricsRegistry:
         return rec
 
     def expected_ttft(self) -> float:
-        """Live TTFT estimate (median of finished requests; 0.0 before any
-        finish). This is what SLO-slack dispatch subtracts from a waiter's
-        deadline: slack = deadline - now - expected_ttft. Cached per new
-        record: the slack key evaluates it per waiter per drain, which
-        must not rescan the whole history each time."""
+        """Live TTFT estimate (median of finished requests; ``ttft_prior``
+        before any finish). This is what SLO-slack dispatch subtracts from
+        a waiter's deadline: slack = deadline - now - expected_ttft.
+        Cached per new record: the slack key evaluates it per waiter per
+        drain, which must not rescan the whole history each time."""
         if self._expected_ttft is None:
             ttfts = [r.ttft for r in self.records
                      if not r.aborted and r.ttft is not None]
-            self._expected_ttft = float(np.median(ttfts)) if ttfts else 0.0
+            self._expected_ttft = (float(np.median(ttfts)) if ttfts
+                                   else self.ttft_prior)
         return self._expected_ttft
 
     # ---------------------------------------------------------- summary --

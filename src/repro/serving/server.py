@@ -55,6 +55,20 @@ from repro.serving.metrics import MetricsRegistry
 _DONE = object()                      # stream sentinel
 
 
+class MigrateSignal(Exception):
+    """Pushed into a stream's queue when its request parks in MIGRATING
+    (disaggregated handoff after prefill, or a drain's live migration).
+    The consumer-side Router catches it and runs the migration protocol
+    -- export, import on a sibling, source release -- from the consumer
+    task, so the pump never blocks on a sibling server. Seeing it raised
+    from a bare ``TokenStream`` means a migration was requested on a
+    server with no fronting ``repro.cluster.Router``."""
+
+    def __init__(self, rid: int):
+        super().__init__(f"request {rid} awaiting KV migration")
+        self.rid = rid
+
+
 class TokenStream:
     """One request's async token channel (single consumer).
 
@@ -75,6 +89,7 @@ class TokenStream:
         self.disconnected = False     # aborted by the disconnect timeout
         self.submit_clock: Optional[float] = None
         self.admit_clock: Optional[float] = None
+        self._migrate_signaled = False   # MigrateSignal already queued
         # wall-clock consumer liveness (disconnect-timeout bookkeeping)
         self._reading = False         # consumer currently inside __anext__
         self._pending_since = None    # first post-step sighting of an
@@ -264,24 +279,146 @@ class AsyncLVLMServer:
             self.on_abort(rid)
         return aborted
 
+    # -------------------------------------------------------- migration --
+    def request_migration(self, rid: int) -> bool:
+        """Ask for ``rid`` to be migrated off this server. An exportable
+        DECODE-phase request parks in MIGRATING now (the pump then pushes
+        a ``MigrateSignal`` to its consumer); a request still waiting,
+        prefilling, or parked at the admission gate is flagged ``handoff``
+        so it parks right after its prefill. Returns False when the
+        request is unknown, finished, or not exportable -- it then simply
+        finishes here."""
+        eng = self.engine
+        for r in eng.running:
+            if r.rid == rid and r.state is State.DECODE:
+                if not eng.can_export(r):
+                    return False
+                r.state = State.MIGRATING
+                if self._wake is not None:
+                    self._wake.set()
+                return True
+        for r in list(eng.waiting) + [x for x in eng.running
+                                      if x.state is State.PREFILL]:
+            if r.rid == rid and r.state is not State.DONE:
+                if not eng.can_export(r):
+                    return False
+                r.handoff = True
+                if self._wake is not None:
+                    self._wake.set()
+                return True
+        stream = self._streams.get(rid)
+        if stream is not None and not stream.aborted \
+                and stream.request.state is State.WAITING:
+            # parked at the admission gate: prefill will park it for
+            # export once admitted
+            if not eng.can_export(stream.request):
+                return False
+            stream.request.handoff = True
+            return True
+        return False
+
+    async def import_stream(self, request: Request, ticket: Dict, *,
+                            ready_at: float = 0.0) -> TokenStream:
+        """Adopt a request migrated FROM a sibling server: register its
+        stream (tokens the source already delivered are not replayed) and
+        commit the KV import through the admission gate, so migrated KV
+        respects the same watermarks as fresh admissions. On any failure
+        (no free slot, cancelled, pump dead) nothing stays registered and
+        the caller still holds the source's export pin."""
+        if self._pump_error is not None:
+            raise RuntimeError("server pump failed") from self._pump_error
+        rid = request.rid
+        if self._pump_task is None:
+            await self.start()
+        if rid in self._streams:
+            raise ValueError(f"request id {rid} already streaming")
+        stream = TokenStream(self, request)
+        stream._submitted = True
+        stream._pushed = len(request.generated)  # source already delivered
+        stream.submit_clock = self.engine.clock
+        # full-decode KV accounting from the first watermark check on: the
+        # request decodes HERE even though its prefill ran elsewhere
+        request._imported = True
+        # the stream registers BEFORE the admission await so the
+        # sanitizer's live-rid/stream invariant holds the moment the
+        # import commits inside the gate
+        # analysis: atomic-step (the duplicate-rid check runs AFTER the
+        # lazy start() suspension, with no await between it and this
+        # registration)
+        self._streams[rid] = stream
+        try:
+            admitted = await self.admission.admit(
+                request,
+                submit=lambda r: self.engine.import_kv(r, ticket,
+                                                       ready_at=ready_at))
+        except BaseException:
+            # analysis: atomic-step (retracts only this coroutine's own
+            # registration; no other stream state is assumed unchanged
+            # across the await)
+            self._streams.pop(rid, None)
+            stream._finished = True
+            raise
+        if not admitted:
+            # analysis: atomic-step (same single-entry retraction as the
+            # failure path above)
+            self._streams.pop(rid, None)
+            stream._finished = True
+            raise RuntimeError(
+                f"import of rid {rid} retracted at the admission gate")
+        stream.admit_clock = self.engine.clock
+        self._wake.set()
+        return stream
+
+    def complete_export(self, rid: int) -> None:
+        """Source-side release after a sibling committed the import (see
+        ``Engine.complete_export``); wakes the pump so a now-unblocked
+        drain can finish."""
+        self.engine.complete_export(rid)
+        self.admission.maybe_admit()     # freed KV -> drain waiters
+        if self._wake is not None:
+            self._wake.set()
+
+    def cancel_export(self, rid: int) -> None:
+        """Back out a migration: the request resumes decoding here."""
+        self.engine.cancel_export(rid)
+        stream = self._streams.get(rid)
+        if stream is not None:
+            stream._migrate_signaled = False   # a later drain may retry
+        if self._wake is not None:
+            self._wake.set()
+
+    def release_migrated(self, rid: int) -> None:
+        """Deregister the stream of a request migrated AWAY. No metrics
+        record here -- the importing server observes the completed
+        request, so fleet-merged registries count it exactly once."""
+        stream = self._streams.pop(rid, None)
+        if stream is not None:
+            stream._finished = True
+
     # ------------------------------------------------------------- pump --
     async def _pump(self) -> None:
         eng = self.engine
         try:
             while True:
-                if not (eng.waiting or eng.running):
-                    if self._stopping:
-                        return
-                    self._wake.clear()
-                    await self._wake.wait()
-                    continue
                 before = eng.clock
-                eng.step()               # one jitted grouped iteration
+                progressed = False
+                if eng.waiting or eng.running:
+                    progressed = eng.step()  # one jitted grouped iteration
                 self._drain()
                 self._check_disconnects()
                 self.admission.maybe_admit()
                 if self.sanitize:
                     self._sanitize_check()   # conservation at the boundary
+                if not progressed:
+                    # idle, or every live request is frozen (MIGRATING /
+                    # awaiting its KV transfer): park until a submit,
+                    # migration completion, or stop wakes the pump --
+                    # never busy-spin
+                    if self._stopping:
+                        return
+                    self._wake.clear()
+                    await self._wake.wait()
+                    continue
                 if self.pacing == "wall":
                     # sleep the step's virtual duration in real time (the
                     # analytic per-step latency estimate), scaled; clients
@@ -351,6 +488,12 @@ class AsyncLVLMServer:
             if stream.request.state is State.DONE:
                 del self._streams[rid]
                 self._finish_stream(stream, aborted=False)
+            elif (stream.request.state is State.MIGRATING
+                  and not stream._migrate_signaled):
+                # tell the consumer -- after any tokens already fanned out
+                # -- to run the migration protocol from its own task
+                stream._migrate_signaled = True
+                stream._q.put_nowait(MigrateSignal(rid))
 
     # ---------------------------------------------------------- reports --
     def summary(self) -> Dict:

@@ -228,6 +228,22 @@ def test_deleting_pin_decrement_trips_r001():
     assert any("decrement" in f.message for f in fs), fs
 
 
+@pytest.mark.parametrize("needle,action", [
+    ("ticket = self._exports.pop(rid)", "export-ticket pop"),
+    ("self.running.remove(req)", "running-list removal"),
+    ('self.slot_req[ticket["slot"]] = None', "source-slot unbind"),
+])
+def test_deleting_migration_source_release_trips_r001(needle, action):
+    """The KV-migration source release (complete_export) is R001-pinned:
+    deleting any one of its release actions -- ticket pop, running-list
+    removal, source-slot unbind -- must flip the analyzer."""
+    src = _read("src/repro/core/serving/engine.py")
+    mutant = _neutralize(src, needle)
+    fs = lint(mutant, ENGINE_PATH, rules=["R001"])
+    assert any(f.rule == "R001" and "complete_export" in f.message
+               and action in f.message for f in fs), fs
+
+
 def test_deleting_slot_handoff_trips_r002():
     src = _read("src/repro/core/serving/engine.py")
     mutant = _neutralize(src, "self.slot_req[slot] = req")

@@ -200,14 +200,68 @@ def test_failover_does_not_rerun_started_streams(lvlm):
     assert dead.dispatched == 1 and other.dispatched == 0
 
 
-def test_no_healthy_replica_raises(lvlm):
+def test_all_draining_parks_submit_until_undrain(lvlm):
+    """Regression (drain->undrain race): a submit that lands while every
+    live replica is transiently draining must NOT raise -- the stream
+    parks router-side and dispatches when a replica rejoins."""
     router = lvlm.serve_cluster(1, _ec(), gen=GEN)
 
     async def drive():
         async with router:
             router.drain(0)
-            with pytest.raises(RuntimeError, match="no healthy replica"):
-                router.submit(Request(rid=0, tokens=[1], max_new_tokens=1))
+            stream = router.submit(Request(rid=0, tokens=[1, 2, 3],
+                                           max_new_tokens=2))
+            assert stream.parked and stream.replica is None
+            task = asyncio.create_task(_consume(stream))
+            await asyncio.sleep(0.01)     # consumer blocks while parked
+            assert not task.done() and not stream._done
+            router.undrain(0)
+            out = await task
+            assert stream.replica.index == 0
+            return out
+
+    assert len(asyncio.run(drive())) == 2
+    assert router._streams == {} and router._parked == []
+    assert router.summary()["finished"] == 1
+
+
+def test_parked_submit_cancel_frees_router_state(lvlm):
+    """A parked stream whose consumer gives up must free the rid (no
+    replica ever saw the request)."""
+    router = lvlm.serve_cluster(1, _ec(), gen=GEN)
+
+    async def drive():
+        async with router:
+            router.drain(0)
+            stream = router.submit(Request(rid=0, tokens=[1],
+                                           max_new_tokens=1))
+            assert stream.parked
+            stream.cancel()
+            assert 0 not in router._streams and router._parked == []
+            router.undrain(0)             # nothing left to dispatch
+            out = await _consume(router.submit(Request(
+                rid=0, tokens=[1, 2], max_new_tokens=2)))
+            return out
+
+    assert len(asyncio.run(drive())) == 2
+
+
+def test_all_dead_fleet_raises_on_submit(lvlm):
+    """Parking is for TRANSIENT unavailability; a fleet whose every pump
+    died can never recover, so submit fails fast."""
+    router = lvlm.serve_cluster(1, _ec(), gen=GEN)
+
+    async def drive():
+        async with router:
+            def boom():
+                raise RuntimeError("injected failure")
+
+            router.replicas[0].server.engine.step = boom
+            with pytest.raises(RuntimeError):
+                await _consume(router.submit(Request(rid=0, tokens=[1],
+                                                     max_new_tokens=1)))
+            with pytest.raises(RuntimeError, match="no live replica"):
+                router.submit(Request(rid=1, tokens=[1], max_new_tokens=1))
 
     asyncio.run(drive())
 

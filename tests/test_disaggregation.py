@@ -1,0 +1,370 @@
+"""Disaggregated serving (PR tentpole): prefill/decode roles, live KV
+migration, and the cluster-shared prefix tier.
+
+Contracts locked down here:
+
+  * roles: a ``prefill`` replica hands every request's post-compression
+    KV to a ``decode`` replica after its first token -- the request
+    finishes on the decode engine, streams stay contract-identical, and
+    the fleet counts it exactly once,
+  * the modeled KV-link transfer (``CostModel.transfer_time``) is a real
+    virtual-clock cost: charged on the importer's clock before its first
+    decode step there,
+  * ``Router.drain`` MIGRATES live KV: the drained replica's in-flight
+    streams continue on a sibling bit-identically (temperature 0) to an
+    undrained run,
+  * exactly-once under a decode-side import failure mid-migration: the
+    router retries the next target or cancels the export and resumes on
+    the source -- never zero, never two live copies,
+  * the runtime sanitizer (engine + server conservation) stays clean
+    across export/import handoffs (engines here run ``sanitize=True``),
+  * handoff KV accounting: a prefill-role admission reserves prompt+1
+    tokens, not prompt+max_new (the decode budget belongs to the
+    importer),
+  * ``SharedPrefixTier``: radix longest-match, LRU eviction + path
+    pruning, and a prefix prefilled on one replica short-circuiting
+    prefill on another (``remote_prefix_hits``),
+  * satellite regressions: one shared KV-link bandwidth constant, and
+    ``MetricsRegistry.expected_ttft`` cold-start prior.
+"""
+import asyncio
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.api import (EngineConfig, GenerationConfig, LVLM, Request)
+from repro.cluster import Router, SharedPrefixTier
+from repro.cluster.prefix_tier import _Node
+from repro.core.kv_cache.tiered import TierStats
+from repro.core.serving.disaggregation import CostModel
+from repro.roofline.hw import KV_LINK_GBPS
+from repro.serving.metrics import MetricsRegistry
+
+MAX_NEW = 6
+GEN = GenerationConfig(decoder="greedy", temperature=0.0,
+                       max_new_tokens=MAX_NEW)
+
+
+@pytest.fixture(scope="module")
+def lvlm():
+    return LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
+
+
+def _ec(**kw):
+    base = dict(max_batch=4, cache_len=96, temperature=0.0, sanitize=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _prompts(n, seed=0, lo=8, hi=16, shared=0):
+    rng = np.random.RandomState(seed)
+    pre = list(rng.randint(1, 512, size=shared)) if shared else []
+    return [pre + list(rng.randint(1, 512, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def _reqs(prompts, new=MAX_NEW):
+    return [Request(rid=i, tokens=list(p), max_new_tokens=new)
+            for i, p in enumerate(prompts)]
+
+
+async def _consume(stream):
+    return [tok async for tok in stream]
+
+
+def _drive_all(front, reqs):
+    async def drive():
+        async with front:
+            return await asyncio.gather(
+                *(_consume(front.submit(r)) for r in reqs))
+
+    outs = asyncio.run(drive())
+    return {r.rid: list(o) for r, o in zip(reqs, outs)}
+
+
+# --------------------------------------------------- roles: prefill/decode --
+
+
+def test_prefill_decode_roles_hand_off_every_request(lvlm):
+    """prefill:1,decode:1 -- every request prefills on replica 0,
+    decodes (and finishes) on replica 1, exactly once; streams match the
+    colocated fleet bit-for-bit at temperature 0."""
+    prompts = _prompts(4, seed=3)
+    ref = _drive_all(lvlm.serve_cluster(2, _ec(), gen=GEN),
+                     _reqs(prompts))
+    router = lvlm.serve_cluster(2, _ec(), gen=GEN,
+                                roles=["prefill", "decode"])
+    got = _drive_all(router, _reqs(prompts))
+    assert got == ref
+    pf, dec = router.replicas
+    assert (pf.role, dec.role) == ("prefill", "decode")
+    assert pf.dispatched == 4 and dec.dispatched == 0
+    assert pf.migrated_out == 4 and dec.migrated_in == 4
+    # every request FINISHED on the decode engine, none on the prefill one
+    assert sorted(r.rid for r in dec.server.engine.finished) == [0, 1, 2, 3]
+    assert pf.server.engine.finished == []
+    # both engines fully released their pools
+    assert pf.server.engine.kv_committed_tokens() == 0
+    assert dec.server.engine.kv_committed_tokens() == 0
+    assert len(router.migrations) == 4
+    s = router.summary()
+    assert s["finished"] == 4 and s["aborted"] == 0
+    assert s["replica_roles"] == ["prefill", "decode"]
+    assert s["disaggregation"]["migrations"] == 4
+    assert s["disaggregation"]["migrated_out_by_replica"] == [4, 0]
+    assert s["disaggregation"]["migrated_in_by_replica"] == [0, 4]
+
+
+def test_roles_validation(lvlm):
+    with pytest.raises(ValueError, match="decode-capable"):
+        lvlm.serve_cluster(2, _ec(), gen=GEN, roles=["prefill", "prefill"])
+    with pytest.raises(ValueError, match="prefill-capable"):
+        lvlm.serve_cluster(2, _ec(), gen=GEN, roles=["decode", "decode"])
+    with pytest.raises(ValueError, match="entries for"):
+        lvlm.serve_cluster(2, _ec(), gen=GEN, roles=["unified"])
+    with pytest.raises(ValueError, match="unknown replica role"):
+        Router([lvlm.serve_async(_ec(), gen=GEN)], roles=["chonk"])
+    # per-replica spec dicts may carry the role instead
+    router = lvlm.serve_cluster(
+        [{"role": "prefill"}, {"role": "decode"}], _ec(), gen=GEN)
+    assert [rep.role for rep in router.replicas] == ["prefill", "decode"]
+
+
+def test_transfer_cost_lands_on_importer_clock(lvlm):
+    """With kv_bytes_per_token > 0 the KV-link transfer is a REAL
+    virtual-clock cost: the importer's first decode step waits out
+    ``ready_at`` = source export clock + transfer_time(kv tokens)."""
+    cost = CostModel(kv_bytes_per_token=2 << 20)   # 2 MiB/token: visible
+    router = lvlm.serve_cluster(2, _ec(cost=cost), gen=GEN,
+                                roles=["prefill", "decode"])
+    reqs = _reqs(_prompts(2, seed=4))
+    got = _drive_all(router, reqs)
+    assert all(len(o) == MAX_NEW for o in got.values())
+    assert len(router.migrations) == 2
+    dec_eng = router.replicas[1].server.engine
+    for m in router.migrations:
+        expect = cost.kv_bytes_per_token * m["kv_tokens"] / (
+            cost.transfer_gbps * 1e9)
+        assert m["transfer_s"] == pytest.approx(expect) and expect > 0
+        # the decode engine's clock never finished a request before the
+        # KV could possibly have arrived
+        assert dec_eng.clock >= m["transfer_s"]
+    d = router.summary()["disaggregation"]
+    assert d["transfer_s_mean"] == pytest.approx(
+        float(np.mean([m["transfer_s"] for m in router.migrations])))
+    assert d["prefill_s_mean"] is not None and d["prefill_s_mean"] > 0
+
+
+def test_handoff_reserves_prefill_only_kv(lvlm):
+    """A handoff request's reservation on the PREFILL engine covers the
+    prompt plus one token -- the decode budget belongs to the importer."""
+    eng = lvlm.serve_async(_ec(), gen=GEN).engine
+    req = Request(rid=0, tokens=[1] * 20, max_new_tokens=16)
+    full = eng.kv_request_tokens(req)
+    req.handoff = True
+    light = eng.kv_request_tokens(req)
+    bs = eng._kv_block()
+    assert light == ((req.kv_prompt_len + 1 + bs - 1) // bs) * bs
+    assert light < full
+    # once imported, the full decode budget is accounted again
+    req._imported = True
+    assert eng.kv_request_tokens(req) == full
+
+
+# ------------------------------------------------------- drain migration --
+
+
+def test_drain_migrates_live_kv_token_identical(lvlm):
+    """Drain with live requests: the drained replica's in-flight KV moves
+    to the sibling and every stream completes BIT-IDENTICAL (temp 0) to
+    an undrained run; the sanitizer (on) stays clean throughout."""
+    prompts = _prompts(3, seed=5)
+    baseline = _drive_all(lvlm.serve_cluster(2, _ec(), gen=GEN),
+                          _reqs(prompts, new=12))
+
+    router = lvlm.serve_cluster(2, _ec(), gen=GEN)
+
+    async def drive():
+        async with router:
+            reqs = _reqs(prompts, new=12)
+            streams = [router.submit(r) for r in reqs]
+            assert streams[0].replica.index == 0      # round-robin
+            got0 = [await streams[0].__anext__(),
+                    await streams[0].__anext__()]     # rid 0 mid-decode
+            router.drain(0)
+            rest = await asyncio.gather(*(_consume(s) for s in streams))
+            return [got0 + rest[0]] + rest[1:]
+
+    outs = asyncio.run(drive())
+    assert {i: o for i, o in enumerate(outs)} == baseline
+    # rid 0 really moved: decode finished on replica 1 with its 2
+    # source-side tokens intact
+    assert router.replicas[0].migrated_out >= 1
+    assert any(m["rid"] == 0 and m["src"] == 0 and m["dst"] == 1
+               for m in router.migrations)
+    assert 0 in [r.rid for r in router.replicas[1].server.engine.finished]
+    assert router.replicas[0].server.engine.kv_committed_tokens() == 0
+    assert router.summary()["finished"] == 3
+
+
+def test_drain_without_sibling_finishes_in_place(lvlm):
+    """A single-replica drain has nowhere to send KV: in-flight streams
+    finish where they are (the old drain contract)."""
+    router = lvlm.serve_cluster(1, _ec(), gen=GEN)
+
+    async def drive():
+        async with router:
+            stream = router.submit(Request(rid=0, tokens=[1, 2, 3, 4],
+                                           max_new_tokens=MAX_NEW))
+            first = await stream.__anext__()
+            router.drain(0)
+            return [first] + await _consume(stream)
+
+    out = asyncio.run(drive())
+    assert len(out) == MAX_NEW
+    assert router.migrations == [] and router.replicas[0].migrated_out == 0
+    assert sorted(r.rid for r in
+                  router.replicas[0].server.engine.finished) == [0]
+
+
+# --------------------------------------------- exactly-once under failure --
+
+
+def test_import_failure_retries_next_decode_replica(lvlm):
+    """Decode replica dies mid-migration: the first import attempt fails,
+    the router retries the NEXT decode target, and the request completes
+    exactly once -- nothing lost, nothing duplicated."""
+    router = lvlm.serve_cluster(3, _ec(), gen=GEN,
+                                roles=["prefill", "decode", "decode"])
+
+    async def broken_import(request, ticket, *, ready_at=0.0):
+        raise RuntimeError("injected import failure (dead importer)")
+
+    router.replicas[1].server.import_stream = broken_import
+    reqs = _reqs(_prompts(2, seed=6))
+    got = _drive_all(router, reqs)
+    assert all(len(o) == MAX_NEW for o in got.values())
+    fleet = sorted(r.rid for rep in router.replicas
+                   for r in rep.server.engine.finished)
+    assert fleet == [0, 1]                    # exactly once, fleet-wide
+    assert router.replicas[1].migrated_in == 0
+    assert router.replicas[2].migrated_in == 2
+    assert all(m["dst"] == 2 for m in router.migrations)
+
+
+def test_import_failure_with_no_alternative_resumes_on_source(lvlm):
+    """Every decode target refuses: the export CANCELS and the request
+    resumes decoding on its source replica -- still exactly once."""
+    router = lvlm.serve_cluster(2, _ec(), gen=GEN,
+                                roles=["prefill", "decode"])
+
+    async def broken_import(request, ticket, *, ready_at=0.0):
+        raise RuntimeError("injected import failure (dead importer)")
+
+    router.replicas[1].server.import_stream = broken_import
+    reqs = _reqs(_prompts(2, seed=7))
+    got = _drive_all(router, reqs)
+    assert all(len(o) == MAX_NEW for o in got.values())
+    assert sorted(r.rid for r in
+                  router.replicas[0].server.engine.finished) == [0, 1]
+    assert router.replicas[1].server.engine.finished == []
+    assert router.migrations == []
+    assert router.replicas[0].server.engine.kv_committed_tokens() == 0
+    assert router.replicas[0].server.engine._exports == {}
+
+
+# --------------------------------------------------- shared prefix tier --
+
+
+def test_shared_prefix_tier_radix_semantics():
+    tier = SharedPrefixTier(block=4, cap=2)
+    snap_a, snap_b = object(), object()
+    tier.insert("none", list(range(8)), snap_a, 8)
+    tier.insert("none", list(range(4)), snap_b, 4)
+    # longest match wins; shorter prefix still resolvable
+    k, s = tier.lookup("none", list(range(12)), block=4)
+    assert (k, s) == (8, snap_a)
+    k, s = tier.lookup("none", list(range(4)) + [99, 99, 99, 99], block=4)
+    assert (k, s) == (4, snap_b)
+    # variant isolation and block-size mismatch are misses
+    assert tier.lookup("fastv-0.5", list(range(8)), block=4) == (0, None)
+    assert tier.lookup("none", list(range(8)), block=8) == (0, None)
+    # LRU eviction at cap, with trie-path pruning behind it
+    tier.insert("none", [7] * 4, object(), 4)     # evicts the LRU entry
+    assert len(tier) == 2 and tier.evictions == 1
+    assert tier.stats()["entries"] == 2
+    tier2 = SharedPrefixTier(block=4, cap=8)
+    tier2.insert("none", list(range(8)), snap_a, 8)
+    tier2._evict_one()
+    assert tier2._roots == {}                     # fully pruned
+
+
+def test_prefix_tier_shares_hits_across_replicas(lvlm):
+    """Round-robin + shared tier: replica 1's cold prefill of a family
+    replica 0 already cached short-circuits via the tier (one remote
+    install), and the streams stay identical to the tier-less run."""
+    prompts = _prompts(4, seed=8, lo=4, hi=8, shared=32)
+    ec = dict(cache_len=128, prefix_cache=True)
+    ref = _drive_all(lvlm.serve_cluster(2, _ec(**ec), gen=GEN,
+                                        shared_prefix=False),
+                     _reqs(prompts, new=4))
+    router = lvlm.serve_cluster(2, _ec(**ec), gen=GEN, shared_prefix=True)
+    assert router.prefix_tier is not None
+    got = _drive_all(router, _reqs(prompts, new=4))
+    assert got == ref
+    assert router.prefix_tier.hits >= 1 and router.prefix_tier.inserts >= 1
+    remote = [rep.server.engine.remote_prefix_hits
+              for rep in router.replicas]
+    assert sum(remote) >= 1
+    per = router.metrics.per_replica()
+    assert sum(p["remote_prefix_hits"] for p in per) == sum(remote)
+    # role-split fleets get the tier by default; unified fleets do not
+    assert lvlm.serve_cluster(2, _ec(**ec), gen=GEN).prefix_tier is None
+    assert lvlm.serve_cluster(2, _ec(**ec), gen=GEN,
+                              roles=["prefill", "decode"]
+                              ).prefix_tier is not None
+
+
+# ------------------------------------------------- satellite regressions --
+
+
+def test_kv_link_bandwidth_is_one_shared_constant():
+    """Regression: tiered.py said 32 GB/s while disaggregation.py said
+    20 -- both now read ``repro.roofline.hw.KV_LINK_GBPS``."""
+    assert CostModel().transfer_gbps == KV_LINK_GBPS
+    sig = inspect.signature(TierStats.transfer_seconds)
+    assert sig.parameters["gbps"].default == KV_LINK_GBPS
+
+
+def test_expected_ttft_cold_start_prior():
+    """Regression: ``expected_ttft`` returned 0.0 before any record, so
+    EDF slack ordering was maximally optimistic for the whole first
+    wave. A fresh registry now reports the configurable prior; real
+    records wash it out."""
+    m = MetricsRegistry()
+    assert m.expected_ttft() == MetricsRegistry.DEFAULT_TTFT_PRIOR > 0.0
+    assert MetricsRegistry(ttft_prior=1.5).expected_ttft() == 1.5
+    req = Request(rid=0, tokens=[1, 2], max_new_tokens=2)
+    req.arrival = 0.0
+    req.generated.extend([5, 6])
+    req.first_token_time = 0.03
+    req.finish_time = 0.05
+    m.observe(req)
+    assert m.expected_ttft() == pytest.approx(0.03)   # prior washed out
+
+
+def test_cold_start_slack_orders_by_deadline(lvlm):
+    """Cold start (no TTFT history): the slack key must still order two
+    waiters by deadline -- the uniform prior shifts values, never the
+    EDF order."""
+    server = lvlm.serve_async(_ec(), gen=GEN)
+    tight = Request(rid=0, tokens=[1], max_new_tokens=1)
+    loose = Request(rid=1, tokens=[1], max_new_tokens=1)
+    tight.slo.ttft_ms = 50.0
+    loose.slo.ttft_ms = 5000.0
+    assert server.metrics.records == []               # truly cold
+    assert server._slack(tight) < server._slack(loose)
+    # the prior makes cold-start slack sign-meaningful: a 50 ms deadline
+    # is already past once the expected TTFT (250 ms prior) exceeds it
+    assert server._slack(tight) < 0 < server._slack(loose)
