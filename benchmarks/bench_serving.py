@@ -210,7 +210,113 @@ def compression_mix(presets=("none", "fastv-0.5")) -> None:
     print("# open_loop " + json.dumps(record, default=float), flush=True)
 
 
-def disagg_burst(lvlm: LVLM) -> None:
+def _wall_stats(events):
+    """Per-request wall-clock latencies derived from tracer events: TTFT
+    is the ``first_token`` instant minus the ``request`` span begin,
+    TPOT the decode stretch (request end - first token) over the
+    emitted tokens. These are the REAL elapsed times of the smoke-model
+    run -- the profiling baseline BENCH_serving.json pins next to the
+    cost-model's virtual-clock numbers."""
+    begin, first, end, tokens = {}, {}, {}, {}
+    for ev in events:
+        if ev["name"] == "request" and ev["k"] == "B":
+            begin[ev["rid"]] = ev["wt"]
+        elif ev["name"] == "first_token":
+            first[ev["rid"]] = ev["wt"]
+        elif ev["name"] == "request" and ev["k"] == "E":
+            end[ev["rid"]] = ev["wt"]
+            tokens[ev["rid"]] = (ev.get("attrs") or {}).get("tokens", 0)
+    ttft = [first[r] - begin[r] for r in first if r in begin]
+    tpot = [(end[r] - first[r]) / (tokens[r] - 1)
+            for r in end if r in first and tokens.get(r, 0) > 1]
+    wts = [ev["wt"] for ev in events]
+    return {"ttft": ttft, "tpot": tpot,
+            "wall_time_s": (max(wts) - min(wts)) if wts else 0.0}
+
+
+def wall_baseline(lvlm: LVLM, out_path: str, trace_out=None) -> None:
+    """``--emit-bench``: one traced open-loop run on a disaggregated
+    prefill/decode fleet, written as the schema-stable wall-clock
+    profiling baseline ``BENCH_serving.json``.
+
+    Schema (keys are stable; values vary with the host):
+      schema_version            int, bumped on any key change
+      scenario / roles / routing  what ran
+      requests / finished / aborted / migrations  workload accounting
+      virtual                   cost-model clock: time_s,
+                                throughput_tok_per_s, ttft_s/tpot_s
+                                {p50,p95}
+      wall                      measured perf_counter: same keys --
+                                the smoke-model profiling baseline
+    """
+    from repro.obs import Tracer, write_chrome_trace
+    tracer = Tracer()
+    rng = np.random.RandomState(7)
+    reqs = _reqs(lvlm.cfg, 16, seed=8, lo=8, hi=24, new=8)
+    arrivals = np.cumsum(rng.exponential(1 / 2000.0, size=len(reqs)))
+    for r, t in zip(reqs, arrivals):
+        r.arrival = float(t)
+    router = lvlm.serve_cluster(
+        [{"role": "prefill"}, {"role": "decode"}],
+        EngineConfig(max_batch=4, cache_len=128, temperature=0.0,
+                     cost=CostModel(kv_bytes_per_token=100_000)),
+        gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                             max_new_tokens=8),
+        routing="least_kv", obs=tracer)
+
+    async def drive():
+        async def consume(r):
+            return [t async for t in router.submit(r)]
+        async with router:
+            await asyncio.gather(*(consume(r) for r in reqs))
+        return router.summary()
+
+    out = asyncio.run(drive())
+    wall = _wall_stats(tracer.events)
+
+    def _p(vals, p):
+        return float(np.percentile(vals, p)) if vals else None
+
+    tokens = out["tokens"]
+    doc = {
+        "schema_version": 1,
+        "scenario": "open_loop/disagg_baseline",
+        "roles": ["prefill", "decode"],
+        "routing": out["routing_policy"],
+        "requests": len(reqs),
+        "finished": out["finished"],
+        "aborted": out["aborted"],
+        "migrations": out.get("disaggregation", {}).get("migrations", 0),
+        "tokens": tokens,
+        "virtual": {
+            "time_s": out["virtual_time_s"],
+            "throughput_tok_per_s": out.get("fleet_throughput_tok_per_s"),
+            "ttft_s": {"p50": out.get("ttft_p50"),
+                       "p95": out.get("ttft_p95")},
+            "tpot_s": {"p50": out.get("tpot_p50"),
+                       "p95": out.get("tpot_p95")},
+        },
+        "wall": {
+            "time_s": wall["wall_time_s"],
+            "throughput_tok_per_s": (tokens / wall["wall_time_s"]
+                                     if wall["wall_time_s"] else None),
+            "ttft_s": {"p50": _p(wall["ttft"], 50),
+                       "p95": _p(wall["ttft"], 95)},
+            "tpot_s": {"p50": _p(wall["tpot"], 50),
+                       "p95": _p(wall["tpot"], 95)},
+        },
+    }
+    with open(out_path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1, default=float)
+        f.write("\n")
+    if trace_out:
+        write_chrome_trace(tracer.events, trace_out)
+    print(f"# bench_baseline written to {out_path} "
+          f"(wall {wall['wall_time_s']:.3f}s, "
+          f"virtual {out['virtual_time_s'] * 1e3:.3f}ms)", flush=True)
+
+
+def disagg_burst(lvlm: LVLM, trace_out=None) -> None:
     """Tentpole acceptance: a video-heavy prefill burst lands mid-run on
     a steady chat stream. Colocated replicas interleave the burst's
     chunked prefill with chat decode iterations, inflating chat TPOT; a
@@ -228,15 +334,15 @@ def disagg_burst(lvlm: LVLM) -> None:
                             scheduler="chunked", chunk_size=32,
                             temperature=0.0, cost=cost)
 
-    def _fleet(label):
+    def _fleet(label, tracer=None):
         # equal aggregate slots (24) either way; the disagg fleet spends
         # them asymmetrically -- narrow prefill, wide decode batch
         if label == "disagg":
             return lvlm.serve_cluster(
                 [{"role": "prefill", "engine_cfg": _ec(8)},
                  {"role": "decode", "engine_cfg": _ec(16)}],
-                _ec(8), gen=gen)
-        return lvlm.serve_cluster(2, _ec(12), gen=gen)
+                _ec(8), gen=gen, obs=tracer)
+        return lvlm.serve_cluster(2, _ec(12), gen=gen, obs=tracer)
 
     def _workload(burst):
         rng = np.random.RandomState(33)
@@ -258,7 +364,13 @@ def disagg_burst(lvlm: LVLM) -> None:
     for label in ("colocated", "disagg"):
         tpot, moved = {}, 0
         for phase in ("baseline", "burst"):
-            router = _fleet(label)
+            tracer = None
+            if trace_out and label == "disagg" and phase == "burst":
+                # trace the interesting fleet: the burst crossing the
+                # prefill->decode KV link (CI validates this trace)
+                from repro.obs import Tracer
+                tracer = Tracer()
+            router = _fleet(label, tracer=tracer)
             chat, video = _workload(burst=(phase == "burst"))
 
             async def drive(router=router, reqs=chat + video):
@@ -272,6 +384,11 @@ def disagg_burst(lvlm: LVLM) -> None:
             tpot[phase] = _chat_tpot_p95(chat)
             if phase == "burst":
                 moved = out.get("disaggregation", {}).get("migrations", 0)
+            if tracer is not None:
+                from repro.obs import write_chrome_trace
+                write_chrome_trace(tracer.events, trace_out)
+                print(f"# trace written to {trace_out} "
+                      f"({len(tracer.events)} events)", flush=True)
         ratio = tpot["burst"] / tpot["baseline"]
         emit(f"serve/disagg_burst/{label}", tpot["burst"] * 1e6,
              f"chat_tpot_p95={tpot['burst']:.6f};"
@@ -341,11 +458,25 @@ def main() -> None:
     ap.add_argument("--only-disagg-burst", action="store_true",
                     help="run just the prefill/decode burst-isolation "
                          "scenario (the disaggregation smoke check)")
+    ap.add_argument("--emit-bench", default=None, metavar="PATH",
+                    help="run the traced disaggregated baseline and write "
+                         "the schema-stable wall+virtual profiling "
+                         "baseline JSON (see wall_baseline docstring for "
+                         "the schema) -- e.g. BENCH_serving.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the traced "
+                         "scenario (--emit-bench run, or the disagg burst "
+                         "with --only-disagg-burst); validate with "
+                         "python -m repro.obs.validate")
     args = ap.parse_args()
     counts = tuple(int(x) for x in str(args.replicas).split(",") if x)
     presets = tuple(p for p in str(args.compression).split(",") if p)
-    if args.only_disagg_burst:
-        disagg_burst(LVLM.from_pretrained("phi4-mini-3.8b", smoke=True))
+    if args.emit_bench:
+        wall_baseline(LVLM.from_pretrained("phi4-mini-3.8b", smoke=True),
+                      args.emit_bench, trace_out=args.trace_out)
+    elif args.only_disagg_burst:
+        disagg_burst(LVLM.from_pretrained("phi4-mini-3.8b", smoke=True),
+                     trace_out=args.trace_out)
     elif args.only_open_loop:
         open_loop(LVLM.from_pretrained("phi4-mini-3.8b", smoke=True),
                   replica_counts=counts)

@@ -1,6 +1,6 @@
 """Rule registry: rule ids -> checker instances, family selection.
 
-A rule is a small class with ``rule_id``, ``family`` (L/R/A/K),
+A rule is a small class with ``rule_id``, ``family`` (L/R/A/K/O),
 ``severity``, ``description``, a path filter (``applies``), and a
 ``check(tree, src, path) -> [Finding]``. Registration is by decorator;
 ``select_rules`` accepts exact ids ("L001"), families ("R"), or "all".
@@ -13,7 +13,7 @@ from typing import Dict, List
 from repro.analysis.findings import Finding
 
 ALL_RULES: Dict[str, "Rule"] = {}
-RULE_FAMILIES = ("L", "R", "A", "K")
+RULE_FAMILIES = ("L", "R", "A", "K", "O")
 
 
 class Rule:
@@ -65,7 +65,7 @@ def select_rules(spec=None) -> Dict[str, Rule]:
 def _load() -> None:
     """Import every rules module (registration is import-time)."""
     from repro.analysis import (rules_async, rules_kernels,  # noqa: F401
-                                rules_layering, rules_resource)
+                                rules_layering, rules_obs, rules_resource)
 
 
 def rule_table() -> List[Dict]:

@@ -24,6 +24,11 @@ every pump iteration):
     exceed live requests.
   * **server streams** -- every live engine request has a registered
     stream; aborted/finished streams are deregistered.
+  * **trace completeness** (when a ``repro.obs`` tracer is enabled) --
+    open ``request`` spans owned by the replica == its live requests
+    at every step/pump boundary: no orphan spans, no untraced
+    requests (rids mid-migration are exempt on the source until its
+    ``complete_export``).
 
 This module is import-light (stdlib only) so ``repro.core`` can import
 it lazily without layering cycles.
@@ -161,6 +166,28 @@ def check_engine_conservation(engine) -> List[str]:
             problems.append(
                 f"{held} live request(s) hold prefix pin {key[0]!r} "
                 "that the engine no longer counts")
+
+    # trace completeness (repro.obs): when tracing is on, the open
+    # "request" spans this replica owns must match its live requests --
+    # a span left open past retire/abort is an orphan the Perfetto
+    # export would render as a request that never ended, and a missing
+    # span means an instrumentation gap. A rid mid-migration may appear
+    # live here while its trace track already moved to the importing
+    # replica (the source still holds its export ticket until
+    # complete_export), so exported rids are exempt on the live side.
+    tracer = getattr(engine, "tracer", None)
+    if tracer is not None and getattr(tracer, "enabled", False):
+        rep = getattr(engine, "trace_replica", 0)
+        live_rids = {r.rid for r in live}
+        owned = tracer.open_requests(rep)
+        for rid in sorted(live_rids - owned - set(exports)):
+            problems.append(
+                f"live request rid={rid} has no open trace span -- "
+                "instrumentation gap")
+        for rid in sorted(owned - live_rids):
+            problems.append(
+                f"open request span rid={rid} owned by replica {rep} "
+                "has no live request -- orphan span")
     return problems
 
 

@@ -285,8 +285,56 @@ RELEASE_COMPLETENESS = {
         ReleaseAction("replica inflight release (inflight.pop)",
                       method_on("inflight", "pop")),
     ],
+    # repro.obs span lifecycle: the engine opens the per-request trace
+    # span in submit() and MUST close it -- step() at retire, abort()
+    # for everything else. Deleting either close orphans every span the
+    # Perfetto export renders (O-rules check reachability; these two
+    # entries make the specific close calls deletion-proof like any
+    # other release action).
+    ("core/serving/engine.py", "abort"): [
+        ReleaseAction("trace span close on abort (tracer.span_abort)",
+                      call_named("span_abort")),
+    ],
+    ("core/serving/engine.py", "step"): [
+        ReleaseAction("request-span close at retire (tracer.span_end)",
+                      call_named("span_end")),
+    ],
 }
 
+
+# ------------------------------------------------------- O: tracing tables --
+# repro.obs emission calls. Every ``span_begin`` must reach a matching
+# ``span_end``/``span_abort``; the other emissions are one-shot.
+SPAN_BEGIN_CALLS = ("span_begin",)
+SPAN_CLOSE_CALLS = ("span_end", "span_abort")
+TRACER_EMIT_CALLS = ("span_begin", "span_end", "span_abort",
+                     "instant", "counter", "slice")
+
+
+@dataclasses.dataclass
+class SpanScope:
+    """Where the O001 span-pairing walk applies and in which mode.
+
+    ``module_pairing=False`` runs the per-function CFG walk (every path
+    begin -> function exit must cross a close site); ``True`` relaxes to
+    "the module must contain at least one close site" for files whose
+    spans open and close in different functions by design (the engine:
+    ``submit`` opens the request span, ``step``/``abort`` close it).
+    """
+    path_suffix: str
+    module_pairing: bool
+    description: str
+
+
+SPAN_SCOPES = [
+    SpanScope("core/serving/engine.py", True,
+              "request/prefill/kv_migration spans cross method "
+              "boundaries; pairing is a module property, with the "
+              "specific closes pinned per-function by R001"),
+    SpanScope("serving/server.py", False,
+              "admission_wait spans open and close inside one "
+              "coroutine on every path, including cancellation"),
+]
 
 # ---------------------------------------------------------- A: async tables --
 # Blocking calls that stall the event loop when issued inside async def.

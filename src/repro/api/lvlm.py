@@ -146,6 +146,21 @@ class LVLM:
                       compressor=make_compressor(gen.compression),
                       compressors=compressors)
 
+    @staticmethod
+    def _resolve_obs(obs):
+        """``obs=`` facade knob -> a ``repro.obs.Tracer`` or None.
+
+        ``None``/``False`` -> no tracing (the engine holds NULL_TRACER and
+        every instrumentation site short-circuits); ``True`` -> a fresh
+        ``Tracer``; a ``Tracer`` instance is used as-is (share one across
+        servers to merge their events into a single trace)."""
+        if obs is None or obs is False:
+            return None
+        if obs is True:
+            from repro.obs import Tracer
+            return Tracer()
+        return obs
+
     def _requests(self, prompts, gen, visual_embeds) -> List[Request]:
         n = len(prompts)
         if visual_embeds is None:
@@ -239,7 +254,8 @@ class LVLM:
     def _serve_engine(self, engine_cfg: Optional[EngineConfig] = None,
                       gen: Optional[GenerationConfig] = None,
                       draft: Optional["LVLM"] = None,
-                      compressors: Optional[Dict] = None) -> Engine:
+                      compressors: Optional[Dict] = None,
+                      tracer=None) -> Engine:
         """Serving-engine wiring shared by ``serve`` (sync, closed-loop)
         and ``serve_async`` (streaming, open-loop): resolve the default
         strategy + generation knobs onto the EngineConfig and register
@@ -262,13 +278,14 @@ class LVLM:
         return Engine(self.model, self.params, ec,
                       decoder=decoders.get(ec.decoder), decoders=decoders,
                       compressor=make_compressor(g.compression),
-                      compressors=compressors)
+                      compressors=compressors, tracer=tracer)
 
     def serve(self, requests: List[Request],
               engine_cfg: Optional[EngineConfig] = None,
               gen: Optional[GenerationConfig] = None,
               draft: Optional["LVLM"] = None,
-              compressors: Optional[Dict] = None) -> ServeResult:
+              compressors: Optional[Dict] = None,
+              obs=None) -> ServeResult:
         """Full serving run: scheduler + batching + virtual-clock metrics.
 
         ``engine_cfg`` keeps its internal-layer knobs (scheduler, batch,
@@ -297,7 +314,8 @@ class LVLM:
         see ``serve_async``.
         """
         eng = self._serve_engine(engine_cfg, gen, draft,
-                                 compressors=compressors)
+                                 compressors=compressors,
+                                 tracer=self._resolve_obs(obs))
         for r in requests:
             eng.submit(r)
         stats = dict(eng.run(), **eng.decoder_stats())
@@ -313,8 +331,8 @@ class LVLM:
                     draft: Optional["LVLM"] = None,
                     admission=None, metrics=None, compressors=None,
                     pacing: str = "virtual", pacing_scale: float = 1.0,
-                    disconnect_timeout_s: Optional[float] = None
-                    ) -> AsyncLVLMServer:
+                    disconnect_timeout_s: Optional[float] = None,
+                    obs=None) -> AsyncLVLMServer:
         """Async streaming server over the same engine wiring as ``serve``.
 
         Returns a ``repro.serving.AsyncLVLMServer``: a background pump over
@@ -342,7 +360,8 @@ class LVLM:
                                draft=draft, admission=admission,
                                metrics=metrics, compressors=compressors,
                                pacing=pacing, pacing_scale=pacing_scale,
-                               disconnect_timeout_s=disconnect_timeout_s)
+                               disconnect_timeout_s=disconnect_timeout_s,
+                               tracer=self._resolve_obs(obs))
 
     def serve_cluster(self, replicas=2,
                       engine_cfg: Optional[EngineConfig] = None,
@@ -353,8 +372,8 @@ class LVLM:
                       shared_prefix: Optional[bool] = None,
                       pacing: str = "virtual",
                       pacing_scale: float = 1.0,
-                      disconnect_timeout_s: Optional[float] = None
-                      ) -> "Router":
+                      disconnect_timeout_s: Optional[float] = None,
+                      obs=None) -> "Router":
         """Multi-engine router: N async server replicas behind ONE submit
         surface (``repro.cluster.Router``), with pluggable routing.
 
@@ -399,6 +418,10 @@ class LVLM:
                              f"{len(specs)} replicas")
         rep_roles = list(roles) if roles is not None \
             else ["unified"] * len(specs)
+        # ONE tracer for the whole fleet: a migrated request's spans land
+        # in a single contiguous trace; the Router assigns each engine its
+        # replica track index
+        tracer = self._resolve_obs(obs)
         servers = []
         for i, spec in enumerate(specs):
             unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission",
@@ -414,6 +437,7 @@ class LVLM:
                 admission=spec.get("admission", admission),
                 compressors=spec.get("compressors", compressors),
                 pacing=pacing, pacing_scale=pacing_scale,
-                disconnect_timeout_s=disconnect_timeout_s))
+                disconnect_timeout_s=disconnect_timeout_s,
+                obs=tracer))
         return Router(servers, routing=routing, roles=rep_roles,
                       shared_prefix=shared_prefix)

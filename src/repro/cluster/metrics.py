@@ -17,6 +17,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.obs.stats import summarize_records
 from repro.serving.metrics import MetricsRegistry
 
 
@@ -79,7 +80,9 @@ class ClusterMetrics:
 
     def summary(self) -> Dict:
         reps = self.router.replicas
-        out = self.merged_registry().summary()
+        # same shared aggregate body as MetricsRegistry.summary
+        # (repro.obs.stats), over the fleet-merged raw records
+        out = summarize_records(self.merged_registry().records)
         out["replicas"] = len(reps)
         out["replica_states"] = [rep.state for rep in reps]
         out["replica_roles"] = [rep.role for rep in reps]

@@ -150,10 +150,12 @@ class SharedPrefixTier:
 
     # ---------------------------------------------------------- reports --
     def stats(self) -> Dict:
+        probes = self.hits + self.misses
         return {
             "entries": len(self._lru),
             "hits": self.hits,
             "misses": self.misses,
+            "hit_rate": self.hits / probes if probes else 0.0,
             "inserts": self.inserts,
             "evictions": self.evictions,
         }

@@ -315,6 +315,10 @@ class Router:
             # replica pump, no consumer will ever retire the stream) must
             # drop the router's bookkeeping too, or the rid leaks forever
             rep.server.on_abort = self._on_server_abort
+            # each engine gets its own track in the (fleet-shared) trace:
+            # spans carried across a migration land on distinct replica
+            # pids in the Perfetto export
+            rep.server.engine.trace_replica = rep.index
 
     def _install_prefix_tier(self,
                              shared_prefix: Optional[bool]
@@ -524,6 +528,35 @@ class Router:
     def summary(self) -> Dict:
         """Fleet-wide merged metrics (see ``ClusterMetrics.summary``)."""
         return self.metrics.summary()
+
+    def metrics_snapshot(self) -> str:
+        """Fleet metrics in Prometheus text format: every replica's
+        families labeled ``replica="i"`` plus router-level counters
+        (failovers, migrations, shared-prefix-tier hits). The scrape
+        surface ``launch.serve --metrics-out`` writes."""
+        from repro.obs.prom import PromText
+        parts = [rep.server.metrics_snapshot(replica=rep.index)
+                 for rep in self.replicas]
+        prom = PromText()
+        prom.counter("failovers_total",
+                     "Requests re-dispatched after a replica died.",
+                     self.failovers)
+        prom.counter("migrations_total", "Completed KV migrations.",
+                     len(self.migrations))
+        prom.counter(
+            "migrated_kv_tokens_total", "KV tokens moved between replicas.",
+            sum(m["kv_tokens"] for m in self.migrations))
+        if self.prefix_tier is not None:
+            stats = self.prefix_tier.stats()
+            prom.counter("prefix_tier_hits_total",
+                         "Shared-prefix-tier lookup hits.", stats["hits"])
+            prom.counter("prefix_tier_misses_total",
+                         "Shared-prefix-tier lookup misses.",
+                         stats["misses"])
+            prom.gauge("prefix_tier_entries",
+                       "Entries resident in the shared prefix tier.",
+                       stats["entries"])
+        return "".join(parts) + prom.render()
 
 
 def _reset_for_retry(req: Request) -> None:

@@ -183,7 +183,7 @@ def _slot_set(pool, slot, one):
 class Engine:
     def __init__(self, model, params, ec: EngineConfig, *, decoder=None,
                  decoders: Optional[Dict] = None, compressor=None,
-                 compressors: Optional[Dict] = None):
+                 compressors: Optional[Dict] = None, tracer=None):
         cfg = model.cfg
         self.ec = ec
         self.params = params
@@ -304,6 +304,16 @@ class Engine:
         self._comp_counts: Dict[str, List[int]] = {}
         self._validate_compressor(self._default_comp_name, self.compressor)
 
+        # observability: the tracer every instrumentation site guards on
+        # (``if self.tracer.enabled:`` -- NULL_TRACER keeps the disabled
+        # hot path call-free). ``trace_replica`` is this engine's track in
+        # a fleet-shared trace; the Router assigns real indices.
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
+        self.trace_replica = 0
+
         # runtime sanitizer: resolved once (config wins over env)
         if ec.sanitize is not None:
             self.sanitize = bool(ec.sanitize)
@@ -423,6 +433,11 @@ class Engine:
                 " (last position is the inactive-slot scratch)")
         req.arrival = max(req.arrival, self.clock)
         self.waiting.append(req)
+        if self.tracer.enabled:
+            self.tracer.span_begin(
+                "request", req.rid, replica=self.trace_replica,
+                vt=self.clock, prompt_len=req.prompt_len,
+                decoder=name, compression=cname)
 
     # -------------------------------------------------- kv accounting --
     @property
@@ -502,6 +517,13 @@ class Engine:
                     r.state = State.DONE
                     r.aborted = True
                     self.aborted.append(r)
+                    if self.tracer.enabled:
+                        # closes the request span AND any open stage span
+                        # (prefill, kv_migration) so an abort never
+                        # orphans part of the trace
+                        self.tracer.span_abort(rid,
+                                               replica=self.trace_replica,
+                                               vt=self.clock)
                     if self.sanitize:
                         self._sanitize_check(f"Engine.abort(rid={rid})")
                     return True
@@ -564,7 +586,20 @@ class Engine:
         req._export_pin = rid
         req.state = State.MIGRATING
         self._exports[rid] = ticket
+        if self.tracer.enabled:
+            self.tracer.span_begin(
+                "kv_migration", rid, replica=self.trace_replica,
+                vt=self.clock, kv_tokens=pos)
+            self.tracer.counter(
+                "migration_bytes_inflight", self._export_bytes_inflight(),
+                replica=self.trace_replica, vt=self.clock)
         return ticket
+
+    def _export_bytes_inflight(self) -> int:
+        """Modeled bytes of every KV snapshot currently pinned for
+        migration out of this engine (a trace counter track)."""
+        bpt = int(getattr(self.ec.cost, "kv_bytes_per_token", 0))
+        return sum(int(t["pos"]) for t in self._exports.values()) * bpt
 
     def complete_export(self, rid: int) -> None:
         """Source-side release of a migrated request: the importing engine
@@ -591,6 +626,12 @@ class Engine:
                 self._prefix_pins.pop(key, None)
         req._export_pin = None
         self.migrated_out += 1
+        if self.tracer.enabled:
+            self.tracer.instant("kv_export_complete", rid,
+                                replica=self.trace_replica, vt=self.clock)
+            self.tracer.counter(
+                "migration_bytes_inflight", self._export_bytes_inflight(),
+                replica=self.trace_replica, vt=self.clock)
         if self.sanitize:
             self._sanitize_check(f"Engine.complete_export(rid={rid})")
 
@@ -606,6 +647,13 @@ class Engine:
         req._export_pin = None
         req.handoff = False
         req.state = State.DECODE
+        if self.tracer.enabled:
+            self.tracer.span_end("kv_migration", rid,
+                                 replica=self.trace_replica,
+                                 vt=self.clock, cancelled=True)
+            self.tracer.counter(
+                "migration_bytes_inflight", self._export_bytes_inflight(),
+                replica=self.trace_replica, vt=self.clock)
         if self.sanitize:
             self._sanitize_check(f"Engine.cancel_export(rid={rid})")
 
@@ -647,6 +695,16 @@ class Engine:
         req.prefill_done = len(req.tokens)
         self.migrated_in += 1
         self.running.append(req)
+        if self.tracer.enabled:
+            # the import commit closes the migration span ON THE TARGET
+            # replica and hands the request's trace track over with it
+            # (Tracer ownership follows the kv_migration end). ``vt`` is
+            # the transfer-complete time -- >= the source's export clock,
+            # so the request's virtual timeline never rewinds across the
+            # replica boundary.
+            self.tracer.span_end(
+                "kv_migration", req.rid, replica=self.trace_replica,
+                vt=req._ready_at, kv_tokens=pos)
         if self.sanitize:
             self._sanitize_check(f"Engine.import_kv(rid={req.rid})")
 
@@ -767,12 +825,24 @@ class Engine:
             slot = self._free_slot()
             req._slot = slot
             self.slot_req[slot] = req
+            if self.tracer.enabled:
+                self.tracer.span_begin("prefill", req.rid,
+                                       replica=self.trace_replica,
+                                       slot=slot, vt=self.clock)
             # dim 1: the request's compression strategy runs before the
             # visual tokens enter the backbone
             ve = req.visual_embeds
             if ve is not None:
                 _, comp = self._resolve_compressor(req.compression)
                 nv_in = len(ve)
+                if self.tracer.enabled:
+                    # vision tokens entering the backbone: the wall-time
+                    # delta of this span is the real compression cost the
+                    # virtual clock does not model
+                    self.tracer.span_begin("compress", req.rid,
+                                           replica=self.trace_replica,
+                                           vt=self.clock, strategy=comp_name,
+                                           nv_in=nv_in)
                 if getattr(comp, "encoder_active", True):
                     # the query embed is only built for strategies that
                     # consume it (custom strategies default to yes)
@@ -784,6 +854,10 @@ class Engine:
                 cnt = self._comp_counts.setdefault(comp_name, [0, 0])
                 cnt[0] += nv_in
                 cnt[1] += len(ve)
+                if self.tracer.enabled:
+                    self.tracer.span_end("compress", req.rid,
+                                         replica=self.trace_replica,
+                                         vt=self.clock, nv_out=len(ve))
             req._ve = ve
             self.slot_nv[slot] = 0 if ve is None else len(ve)
             # visual tokens are prefill work too (the dim-1 latency claim)
@@ -831,6 +905,10 @@ class Engine:
 
         req.prefill_done = end
         self.slot_pos[slot] = nv + end
+        if self.tracer.enabled:
+            self.tracer.instant("prefill_chunk", req.rid,
+                                replica=self.trace_replica, slot=slot,
+                                vt=self.clock, tokens=n)
         if req.prefill_done >= len(req.tokens):
             # prompt complete: first token comes from the last logits
             if ec.prefix_cache and req._ve is None:
@@ -854,6 +932,10 @@ class Engine:
             req.generated.append(tok)
             req._needs_ttft = True
             self.slot_last_tok[slot] = tok
+            if self.tracer.enabled:
+                self.tracer.span_end("prefill", req.rid,
+                                     replica=self.trace_replica, slot=slot,
+                                     vt=self.clock)
             if req.is_finished() or tok == ec.eos_id:
                 req.state = State.DONE
             elif req.handoff and self.can_export(req):
@@ -942,6 +1024,12 @@ class Engine:
                 cost = self._iter_decode_cost
             total_cost += cost
             self.group_costs[name] = self.group_costs.get(name, 0.0) + cost
+            if self.tracer.enabled:
+                # one lane slice per decoder group per iteration: where
+                # the virtual decode cost of a mixed fleet actually goes
+                self.tracer.slice(f"decode:{name}", self.clock, cost,
+                                  replica=self.trace_replica,
+                                  batch=len(group))
         self._iter_decode_cost = total_cost
         for r in reqs:
             for tok in emitted_all.get(r._slot, ()):
@@ -980,11 +1068,21 @@ class Engine:
         if decode_reqs:
             self._decode_iteration(decode_reqs)
         # virtual clock
+        vt0 = self.clock
         dt = self.ec.cost.prefill_time(plan.prefill_tokens
                                        + self._iter_visual_tokens)
         dt += self._iter_decode_cost + self._iter_transfer_cost
         self.clock += dt
         self.iters += 1
+        if self.tracer.enabled:
+            self.tracer.slice("engine_step", vt0, dt,
+                              replica=self.trace_replica,
+                              prefill_tokens=plan.prefill_tokens,
+                              decode_batch=len(decode_reqs))
+            for r in decode_reqs:
+                self.tracer.slice("decode_step", vt0, dt,
+                                  replica=self.trace_replica,
+                                  slot=r._slot, rid=r.rid)
         # stamp times & retire
         seen, stampable = set(), []
         for r in self.running + [r for r, _ in plan.prefill]:
@@ -995,10 +1093,19 @@ class Engine:
             if getattr(r, "_needs_ttft", False):
                 r.first_token_time = self.clock
                 r._needs_ttft = False
+                if self.tracer.enabled:
+                    self.tracer.instant("first_token", r.rid,
+                                        replica=self.trace_replica,
+                                        vt=self.clock)
             if r.state == State.DONE and r.finish_time is None:
                 r.finish_time = self.clock
                 self.finished.append(r)
                 self._release_request(r)
+                if self.tracer.enabled:
+                    self.tracer.span_end("request", r.rid,
+                                         replica=self.trace_replica,
+                                         vt=self.clock,
+                                         tokens=len(r.generated))
         self.running = [r for r in self.running if r.state != State.DONE]
         if self.sanitize:
             self._sanitize_check(f"Engine.step (iter {self.iters})")

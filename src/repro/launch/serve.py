@@ -134,6 +134,17 @@ def main() -> int:
     ap.add_argument("--disconnect-timeout", type=float, default=None,
                     metavar="S", help="abort streams whose consumer "
                     "stopped reading for S wall seconds")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable repro.obs tracing and write the run as "
+                         "Chrome-trace/Perfetto JSON (open in ui.perfetto"
+                         ".dev; validate with python -m repro.obs.validate)")
+    ap.add_argument("--trace-events", default=None, metavar="PATH",
+                    help="enable tracing and stream raw events as JSONL "
+                         "(input for scripts/trace_report.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-format metrics snapshot "
+                         "after the run ('-' = stdout); requires the async "
+                         "path (--open-loop or --replicas > 1)")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower/compile decode_32k under the production mesh")
     args = ap.parse_args()
@@ -181,16 +192,22 @@ def main() -> int:
     roles = parse_roles(args.roles) if args.roles else None
     if roles:
         args.replicas = len(roles)
+    tracer = None
+    if args.trace_out or args.trace_events:
+        from repro.obs import Tracer
+        tracer = Tracer()
     if args.open_loop > 0 or args.replicas > 1:
         front = lvlm.serve_cluster(
             args.replicas, ec, gen=gen, routing=args.routing,
             roles=roles, admission=adm, pacing=args.pacing,
             pacing_scale=args.pacing_scale,
-            disconnect_timeout_s=args.disconnect_timeout) \
+            disconnect_timeout_s=args.disconnect_timeout,
+            obs=tracer) \
             if args.replicas > 1 else lvlm.serve_async(
                 ec, gen=gen, admission=adm, pacing=args.pacing,
                 pacing_scale=args.pacing_scale,
-                disconnect_timeout_s=args.disconnect_timeout)
+                disconnect_timeout_s=args.disconnect_timeout,
+                obs=tracer)
 
         async def drive():
             async with front:
@@ -199,8 +216,24 @@ def main() -> int:
             return front.summary()
 
         stats = asyncio.run(drive())
+        if args.metrics_out:
+            text = front.metrics_snapshot()
+            if args.metrics_out == "-":
+                print(text, end="")
+            else:
+                with open(args.metrics_out, "w", encoding="utf-8") as f:
+                    f.write(text)
     else:
-        stats = lvlm.serve(reqs, engine_cfg=ec, gen=gen).stats
+        if args.metrics_out:
+            ap.error("--metrics-out requires the async path "
+                     "(--open-loop or --replicas > 1)")
+        stats = lvlm.serve(reqs, engine_cfg=ec, gen=gen, obs=tracer).stats
+    if tracer is not None:
+        if args.trace_out:
+            from repro.obs import write_chrome_trace
+            write_chrome_trace(tracer.events, args.trace_out)
+        if args.trace_events:
+            tracer.write_jsonl(args.trace_events)
     print(json.dumps({k: v for k, v in stats.items()
                       if not isinstance(v, (list, dict))}, indent=1,
                      default=float))

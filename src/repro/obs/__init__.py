@@ -1,0 +1,24 @@
+"""``repro.obs`` -- zero-overhead-when-off observability.
+
+Per-request lifecycle tracing (``Tracer`` -- dual virtual/wall clocks,
+one contiguous trace per request across the prefill->decode migration
+boundary), Chrome-trace/Perfetto export (``perfetto``), Prometheus text
+metric snapshots (``prom``), shared summary statistics (``stats``), and
+trace validation (``python -m repro.obs.validate``).
+
+Enable via the facade: ``lvlm.serve_async(..., obs=True)`` or pass a
+``Tracer``; disabled (the default) the stack holds ``NULL_TRACER`` and
+every instrumentation site short-circuits on ``tracer.enabled``.
+"""
+from repro.obs.perfetto import to_chrome_trace, write_chrome_trace
+from repro.obs.stats import (mean_or_none, percentile_summary,
+                             summarize_records)
+from repro.obs.trace import NULL_TRACER, JsonlSink, NullTracer, Tracer
+from repro.obs.validate import load_trace, validate_trace
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "JsonlSink",
+    "to_chrome_trace", "write_chrome_trace",
+    "summarize_records", "percentile_summary", "mean_or_none",
+    "load_trace", "validate_trace",
+]

@@ -18,7 +18,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.serving.request import Request, percentiles
+from repro.core.serving.request import Request
+from repro.obs.stats import summarize_records
 
 
 @dataclasses.dataclass
@@ -88,30 +89,9 @@ class MetricsRegistry:
 
     # ---------------------------------------------------------- summary --
     def summary(self, engine=None) -> Dict:
-        done = [r for r in self.records if not r.aborted]
-        ttfts = [r.ttft for r in done if r.ttft is not None]
-        tpots = [r.tpot for r in done if r.tpot is not None]
-        jcts = [r.jct for r in done if r.jct is not None]
-        waits = [r.queue_wait for r in self.records]
-        n = len(done)
-        out: Dict = {
-            "finished": n,
-            "aborted": sum(r.aborted for r in self.records),
-            "tokens": sum(r.tokens for r in done),
-            "ttft_mean": float(np.mean(ttfts)) if ttfts else None,
-            "tpot_mean": float(np.mean(tpots)) if tpots else None,
-            "jct_mean": float(np.mean(jcts)) if jcts else None,
-            "queue_wait_mean": float(np.mean(waits)) if waits else None,
-        }
-        out.update(percentiles(ttfts, "ttft"))
-        out.update(percentiles(tpots, "tpot"))
-        out.update(percentiles(waits, "queue_wait"))
-        out["slo_ttft_attainment"] = (
-            sum(r.ttft_ok for r in done) / n if n else None)
-        out["slo_tpot_attainment"] = (
-            sum(r.tpot_ok for r in done) / n if n else None)
-        out["slo_goodput"] = (
-            sum(r.ttft_ok and r.tpot_ok for r in done) / n if n else None)
+        # the aggregate body lives in repro.obs.stats -- shared with the
+        # fleet-merged ClusterMetrics summary so the two can never drift
+        out = summarize_records(self.records)
         if engine is not None:
             out["virtual_time_s"] = engine.clock
             out["decode_cost_by_group"] = dict(engine.group_costs)

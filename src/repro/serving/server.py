@@ -145,11 +145,16 @@ class AsyncLVLMServer:
                  metrics: Optional[MetricsRegistry] = None,
                  compressors: Optional[Dict] = None,
                  pacing: str = "virtual", pacing_scale: float = 1.0,
-                 disconnect_timeout_s: Optional[float] = None):
+                 disconnect_timeout_s: Optional[float] = None,
+                 tracer=None):
         if pacing not in ("virtual", "wall"):
             raise ValueError("pacing must be 'virtual' or 'wall'")
         self.engine = lvlm._serve_engine(engine_cfg, gen, draft,
-                                         compressors=compressors)
+                                         compressors=compressors,
+                                         tracer=tracer)
+        # the server shares the engine's tracer (NULL_TRACER when off);
+        # admission-gate spans and pump counter tracks are emitted here
+        self.tracer = self.engine.tracer
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.admission = AdmissionController(
             admission if admission is not None else AdmissionConfig(),
@@ -244,16 +249,31 @@ class AsyncLVLMServer:
             await self.start()          # lazy start outside `async with`
         stream._submitted = True
         stream.submit_clock = self.engine.clock
+        rid = stream.request.rid
+        rep = self.engine.trace_replica
+        if self.tracer.enabled:
+            self.tracer.span_begin("admission_wait", rid, replica=rep,
+                                   vt=self.engine.clock)
         try:
             admitted = await self.admission.admit(stream.request)
         except asyncio.CancelledError:
             self._streams.pop(stream.request.rid, None)
             stream.aborted = True
             stream._finished = True
+            if self.tracer.enabled:
+                self.tracer.span_abort(rid, replica=rep,
+                                       vt=self.engine.clock,
+                                       reason="cancelled at admission")
             raise
         if not admitted:
+            if self.tracer.enabled:
+                self.tracer.span_end("admission_wait", rid, replica=rep,
+                                     vt=self.engine.clock, cancelled=True)
             return                      # cancelled at the admission gate
         stream.admit_clock = self.engine.clock
+        if self.tracer.enabled:
+            self.tracer.span_end("admission_wait", rid, replica=rep,
+                                 vt=self.engine.clock)
         self._wake.set()
 
     def abort(self, rid: int) -> bool:
@@ -346,6 +366,14 @@ class AsyncLVLMServer:
         # lazy start() suspension, with no await between it and this
         # registration)
         self._streams[rid] = stream
+        rep = self.engine.trace_replica
+        if self.tracer.enabled:
+            # the import waits out the same watermarks as a fresh
+            # admission; on failure ONLY this span closes -- the request
+            # (and its open kv_migration span) stays live on the source,
+            # which resumes it via cancel_export or tries a sibling
+            self.tracer.span_begin("admission_wait", rid, replica=rep,
+                                   vt=self.engine.clock, imported=True)
         try:
             admitted = await self.admission.admit(
                 request,
@@ -357,15 +385,24 @@ class AsyncLVLMServer:
             # across the await)
             self._streams.pop(rid, None)
             stream._finished = True
+            if self.tracer.enabled:
+                self.tracer.span_end("admission_wait", rid, replica=rep,
+                                     vt=self.engine.clock, failed=True)
             raise
         if not admitted:
             # analysis: atomic-step (same single-entry retraction as the
             # failure path above)
             self._streams.pop(rid, None)
             stream._finished = True
+            if self.tracer.enabled:
+                self.tracer.span_end("admission_wait", rid, replica=rep,
+                                     vt=self.engine.clock, failed=True)
             raise RuntimeError(
                 f"import of rid {rid} retracted at the admission gate")
         stream.admit_clock = self.engine.clock
+        if self.tracer.enabled:
+            self.tracer.span_end("admission_wait", rid, replica=rep,
+                                 vt=self.engine.clock)
         self._wake.set()
         return stream
 
@@ -407,6 +444,8 @@ class AsyncLVLMServer:
                 self._drain()
                 self._check_disconnects()
                 self.admission.maybe_admit()
+                if progressed and self.tracer.enabled:
+                    self._emit_counters()
                 if self.sanitize:
                     self._sanitize_check()   # conservation at the boundary
                 if not progressed:
@@ -431,6 +470,28 @@ class AsyncLVLMServer:
         except BaseException as exc:     # fail streams: never hang clients
             self._fail(exc)
             raise
+
+    def _emit_counters(self) -> None:
+        """Post-step counter tracks: KV watermark, admission queue depth,
+        prefix hits (local + cluster tier), migration bytes in flight --
+        the live time-series the SLO-adaptive controller (ROADMAP) will
+        consume and the Perfetto export renders as counter lanes."""
+        eng = self.engine
+        rep = eng.trace_replica
+        vt = eng.clock
+        t = self.tracer
+        t.counter("kv_committed_tokens", eng.kv_committed_tokens(),
+                  replica=rep, vt=vt)
+        t.counter("admission_queue_depth", len(self.admission._waiters),
+                  replica=rep, vt=vt)
+        t.counter("prefix_hit_tokens", eng.prefix_hit_tokens,
+                  replica=rep, vt=vt)
+        if eng.prefix_share is not None:
+            stats = eng.prefix_share.stats()
+            t.counter("prefix_tier_hits", stats.get("hits", 0),
+                      replica=rep, vt=vt)
+        t.counter("migration_bytes_inflight",
+                  eng._export_bytes_inflight(), replica=rep, vt=vt)
 
     def _check_disconnects(self) -> None:
         """Abort streams whose consumer hung up: tokens stayed queued
@@ -467,6 +528,14 @@ class AsyncLVLMServer:
             self._fan_out(stream)
             stream._finished = True
             stream._q.put_nowait(exc)
+            if self.tracer.enabled:
+                # close every span the dead replica still holds open; a
+                # fronting Router's failover re-begins the request span
+                # on the replica it redispatches to
+                self.tracer.span_abort(rid,
+                                       replica=self.engine.trace_replica,
+                                       vt=self.engine.clock,
+                                       reason="pump failure")
 
     def _fan_out(self, stream: TokenStream) -> None:
         gen = stream.request.generated
@@ -496,6 +565,33 @@ class AsyncLVLMServer:
                 stream._q.put_nowait(MigrateSignal(rid))
 
     # ---------------------------------------------------------- reports --
+    def metrics_snapshot(self, *, replica: Optional[int] = None) -> str:
+        """Pull-based metrics snapshot in Prometheus text exposition
+        format: request-latency summaries (exact quantiles over the
+        registry's records), live engine gauges (KV watermark, pool
+        occupancy, virtual clock), and admission counters. ``replica``
+        adds a ``replica="i"`` label to every family (the Router passes
+        each replica's index)."""
+        from repro.obs.prom import (PromText, engine_families,
+                                    registry_families)
+        prom = PromText()
+        labels = ({"replica": str(replica)}
+                  if replica is not None else None)
+        registry_families(prom, self.metrics.records, labels=labels)
+        engine_families(prom, self.engine, labels=labels)
+        prom.counter("admitted_total", "Requests admitted.",
+                     self.admission.admitted, labels=labels)
+        prom.counter("deferred_total",
+                     "Requests deferred at the admission gate.",
+                     self.admission.deferrals, labels=labels)
+        prom.gauge("admission_queue_depth",
+                   "Requests parked at the admission gate.",
+                   len(self.admission._waiters), labels=labels)
+        prom.counter("disconnects_total",
+                     "Streams aborted by the disconnect timeout.",
+                     self.disconnects, labels=labels)
+        return prom.render()
+
     def summary(self) -> Dict:
         """Metrics summary + admission counters (see MetricsRegistry)."""
         out = self.metrics.summary(self.engine)

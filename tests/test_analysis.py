@@ -410,6 +410,141 @@ def test_k004_store_without_astype():
     assert rules_of(fs) == ["K004"]
 
 
+# ----------------------------------------------------------- O-rules --
+SERVER_PATH = "src/repro/serving/server.py"
+
+SPAN_OK = """
+    class S:
+        async def _admit(self, stream):
+            if self.tracer.enabled:
+                self.tracer.span_begin("admission_wait", 1)
+            try:
+                ok = await self.admission.admit(stream.request)
+            except BaseException:
+                if self.tracer.enabled:
+                    self.tracer.span_abort(1)
+                raise
+            if not ok:
+                if self.tracer.enabled:
+                    self.tracer.span_end("admission_wait", 1)
+                return
+            if self.tracer.enabled:
+                self.tracer.span_end("admission_wait", 1)
+            self._wake.set()
+    """
+
+
+def test_o001_guarded_span_pairing_clean():
+    """The `if tracer.enabled:` guard idiom pairs on every path,
+    including the exception and retraction paths."""
+    assert lint(SPAN_OK, SERVER_PATH, rules=["O001"]) == []
+
+
+def test_o001_leaky_return_path_flagged():
+    # drop the close on the not-admitted early return: that path now
+    # exits with the span open
+    bad = SPAN_OK.replace(
+        """            if not ok:
+                if self.tracer.enabled:
+                    self.tracer.span_end("admission_wait", 1)
+                return""",
+        """            if not ok:
+                return""")
+    fs = lint(bad, SERVER_PATH, rules=["O001"])
+    assert rules_of(fs) == ["O001", "O001"]     # guard header + call site
+    assert "orphan span" in fs[0].message
+
+
+def test_o001_module_pairing_for_engine_spans():
+    src = """
+    class Engine:
+        def submit(self, req):
+            self.tracer.span_begin("request", req.rid)
+
+        def step(self):
+            self.tracer.span_end("request", 1)
+    """
+    assert lint(src, ENGINE_PATH, rules=["O001"]) == []
+    bad = src.replace('self.tracer.span_end("request", 1)', "pass")
+    fs = lint(bad, ENGINE_PATH, rules=["O001"])
+    assert rules_of(fs) == ["O001"]
+    assert "no span_end/span_abort site" in fs[0].message
+
+
+def test_renaming_server_span_closes_trips_o001():
+    """Real-tree mutation: neutering every close in the server leaves
+    _admit/import_stream opening spans no path ever closes."""
+    src = _read("src/repro/serving/server.py")
+    mutant = (src.replace("span_end(", "span_noop(")
+              .replace("span_abort(", "span_noop("))
+    fs = lint(mutant, SERVER_PATH, rules=["O001"])
+    assert fs and all(f.rule == "O001" for f in fs), fs
+
+
+def test_renaming_engine_span_closes_trips_o001():
+    src = _read("src/repro/core/serving/engine.py")
+    mutant = (src.replace("span_end(", "span_noop(")
+              .replace("span_abort(", "span_noop("))
+    fs = lint(mutant, ENGINE_PATH, rules=["O001"])
+    assert fs and all(f.rule == "O001" for f in fs), fs
+
+
+@pytest.mark.parametrize("call,action", [
+    ("span_abort(", "trace span close on abort"),
+    ("span_end(", "request-span close at retire"),
+])
+def test_deleting_engine_span_close_trips_r001(call, action):
+    """The R-table pins the specific closes: Engine.abort must
+    span_abort, Engine.step must span_end at retire."""
+    src = _read("src/repro/core/serving/engine.py")
+    mutant = src.replace(call, "span_noop(")
+    fs = lint(mutant, ENGINE_PATH, rules=["R001"])
+    assert any(f.rule == "R001" and action in f.message for f in fs), fs
+
+
+O002_KERNEL = """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        tracer.instant("inner", 0)
+        o_ref[...] = x_ref[...].astype(o_ref.dtype)
+
+    def run(x, tracer):
+        tracer.span_begin("run", 0)
+        out = pl.pallas_call(
+            kern,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+        )(x)
+        tracer.span_end("run", 0)
+        return out
+    """
+
+
+def test_o002_kernel_emission_flagged():
+    fs = lint(O002_KERNEL, KPATH, rules=["O002"])
+    assert rules_of(fs) == ["O002"]
+    assert "trace time" in fs[0].message
+
+
+def test_o002_host_wrapper_emission_clean():
+    ok = O002_KERNEL.replace('    tracer.instant("inner", 0)\n', '')
+    assert lint(ok, KPATH, rules=["O002"]) == []
+
+
+def test_o002_generic_names_need_a_tracer_object():
+    # jax.lax.slice inside a kernel shares a name with Tracer.slice;
+    # only calls on a tracer object count
+    ok = O002_KERNEL.replace(
+        'tracer.instant("inner", 0)',
+        'y = jax.lax.slice(x_ref[...], (0, 0), (4, 4))')
+    assert lint(ok, KPATH, rules=["O002"]) == []
+
+
 # ------------------------------------------------- waivers / baseline --
 def test_syntax_error_reports_e000():
     fs = analyze_source("def broken(:\n", "src/x.py")

@@ -1,0 +1,484 @@
+"""repro.obs (PR tentpole): per-request lifecycle tracing, fleet
+metrics export, and the profiling baseline plumbing.
+
+Contracts locked down here:
+
+  * ZERO overhead when off: the default engine/server hold NULL_TRACER
+    and the hot path performs no tracer calls at all (every NullTracer
+    method is patched to raise; a full serve run must not trip one),
+  * tracing changes nothing: a traced cluster run is bit-identical to
+    the untraced run at temperature 0,
+  * trace completeness: a disaggregated run with real KV migrations
+    produces one contiguous, fully-closed trace per request
+    (``validate_trace(..., require_migrations=True)`` is clean) --
+    including under abort mid-chunked-prefill, decode-target death
+    during migration, and disconnect-timeout,
+  * the runtime sanitizer cross-checks the tracer: a span deleted out
+    from under a live request (or left open past its request) is a
+    ``SanitizerError`` at the next step boundary,
+  * the Perfetto/Chrome export shape, the Prometheus text snapshot,
+    the shared ``repro.obs.stats`` summary helper, the JSONL sink, the
+    validate CLI, and the ``scripts/trace_report.py`` attribution.
+"""
+import asyncio
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import SanitizerError
+from repro.api import EngineConfig, GenerationConfig, LVLM, Request
+from repro.core.serving.disaggregation import CostModel
+from repro.obs import (JsonlSink, NULL_TRACER, NullTracer, Tracer,
+                       load_trace, mean_or_none, percentile_summary,
+                       summarize_records, to_chrome_trace, validate_trace,
+                       write_chrome_trace)
+from repro.serving.metrics import MetricsRegistry
+
+MAX_NEW = 6
+GEN = GenerationConfig(decoder="greedy", temperature=0.0,
+                       max_new_tokens=MAX_NEW)
+COST = CostModel(kv_bytes_per_token=100_000)
+
+
+@pytest.fixture(scope="module")
+def lvlm():
+    return LVLM.from_pretrained("phi4-mini-3.8b", smoke=True)
+
+
+def _ec(**kw):
+    base = dict(max_batch=4, cache_len=96, temperature=0.0, sanitize=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _prompts(n, seed=0, lo=8, hi=16):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, 512, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def _reqs(prompts, new=MAX_NEW):
+    return [Request(rid=i, tokens=list(p), max_new_tokens=new)
+            for i, p in enumerate(prompts)]
+
+
+async def _consume(stream):
+    return [tok async for tok in stream]
+
+
+def _drive_all(front, reqs):
+    async def drive():
+        async with front:
+            return await asyncio.gather(
+                *(_consume(front.submit(r)) for r in reqs))
+
+    outs = asyncio.run(drive())
+    return {r.rid: list(o) for r, o in zip(reqs, outs)}
+
+
+# ------------------------------------------------- zero overhead when off --
+
+
+def test_untraced_hot_path_makes_no_tracer_calls(lvlm, monkeypatch):
+    """The default (untraced) stack must not call ANY tracer method --
+    guarded sites skip on ``enabled`` alone. Patching every NullTracer
+    emit to raise turns a single stray call into a test failure."""
+    def boom(*a, **k):
+        raise AssertionError("tracer method called on the untraced path")
+
+    for name in ("span_begin", "span_end", "span_abort", "instant",
+                 "slice", "counter"):
+        monkeypatch.setattr(NullTracer, name, boom)
+    res = lvlm.serve(_reqs(_prompts(3, seed=1)), engine_cfg=_ec(), gen=GEN)
+    assert res.engine.tracer is NULL_TRACER
+    assert res.stats["finished"] == 3
+    # the async/cluster path too (admission, pump counters, migration)
+    router = lvlm.serve_cluster(2, _ec(cost=COST), gen=GEN,
+                                roles=["prefill", "decode"])
+    got = _drive_all(router, _reqs(_prompts(2, seed=2)))
+    assert all(len(o) == MAX_NEW for o in got.values())
+
+
+def test_traced_run_is_bit_identical_at_temp0(lvlm):
+    prompts = _prompts(4, seed=3)
+    ref = _drive_all(lvlm.serve_cluster(2, _ec(cost=COST), gen=GEN,
+                                        roles=["prefill", "decode"]),
+                     _reqs(prompts))
+    tracer = Tracer()
+    got = _drive_all(lvlm.serve_cluster(2, _ec(cost=COST), gen=GEN,
+                                        roles=["prefill", "decode"],
+                                        obs=tracer),
+                     _reqs(prompts))
+    assert got == ref
+    assert tracer.events            # and the traced run actually traced
+
+
+# ------------------------------------------------------ trace completeness --
+
+
+def test_disagg_trace_is_complete_across_migrations(lvlm):
+    """One shared tracer across a prefill/decode fleet: every request
+    yields one contiguous trace that survives the migration boundary,
+    with zero orphan spans and monotonic per-request clocks."""
+    tracer = Tracer()
+    router = lvlm.serve_cluster(2, _ec(cost=COST), gen=GEN,
+                                roles=["prefill", "decode"], obs=tracer)
+    got = _drive_all(router, _reqs(_prompts(4, seed=4)))
+    assert all(len(o) == MAX_NEW for o in got.values())
+    assert router.summary()["disaggregation"]["migrations"] == 4
+    assert tracer.open_spans() == []
+    assert tracer.open_requests() == set()
+    problems = validate_trace(to_chrome_trace(tracer.events),
+                              require_migrations=True)
+    assert problems == []
+    # the migration span begins on the source replica and ends on the
+    # importer -- ONE span, two replicas
+    for rid in got:
+        b = next(e for e in tracer.events
+                 if e["k"] == "B" and e["name"] == "kv_migration"
+                 and e["rid"] == rid)
+        e = next(e for e in tracer.events
+                 if e["k"] == "E" and e["name"] == "kv_migration"
+                 and e["rid"] == rid)
+        assert (b["rep"], e["rep"]) == (0, 1)
+
+
+def test_abort_mid_chunked_prefill_closes_trace(lvlm):
+    """Aborting a request between prefill chunks closes every open span
+    (request + prefill) with the abort marker -- no orphans, and the
+    sanitizer (on at every pump iteration) stays clean."""
+    tracer = Tracer()
+    server = lvlm.serve_async(
+        _ec(cache_len=128, scheduler="chunked", chunk_size=8),
+        gen=GEN, obs=tracer)
+    eng = server.engine
+    prompt = list(np.random.RandomState(5).randint(1, 512, size=40))
+    steps = {"n": 0}
+    real_step = eng.step
+
+    def step_then_abort():
+        progressed = real_step()
+        steps["n"] += 1
+        if steps["n"] == 2:          # 40-token prompt, 8-token chunks:
+            server.abort(0)          # still mid-prefill, span open
+        return progressed
+
+    eng.step = step_then_abort
+
+    async def drive():
+        async with server:
+            s = server.submit(Request(rid=0, tokens=prompt,
+                                      max_new_tokens=MAX_NEW))
+            return await _consume(s), s
+
+    got, stream = asyncio.run(drive())
+    assert stream.aborted and got == []
+    begun = {e["name"] for e in tracer.events if e["k"] == "B"}
+    assert "prefill" in begun        # the abort really hit mid-prefill
+    assert tracer.open_spans() == []
+    ends = [e for e in tracer.events if e["k"] == "E"
+            and (e.get("attrs") or {}).get("aborted")]
+    assert {e["name"] for e in ends} >= {"request", "prefill"}
+    assert validate_trace(to_chrome_trace(tracer.events)) == []
+
+
+def test_decode_target_death_closes_trace(lvlm):
+    """Every decode target refuses the import: the export cancels and
+    the request resumes on the source -- the kv_migration span still
+    closes (cancelled), the request span closes at finish."""
+    tracer = Tracer()
+    router = lvlm.serve_cluster(2, _ec(cost=COST), gen=GEN,
+                                roles=["prefill", "decode"], obs=tracer)
+
+    async def broken_import(request, ticket, *, ready_at=0.0):
+        raise RuntimeError("injected import failure (dead importer)")
+
+    router.replicas[1].server.import_stream = broken_import
+    got = _drive_all(router, _reqs(_prompts(2, seed=6)))
+    assert all(len(o) == MAX_NEW for o in got.values())
+    assert router.migrations == []
+    assert tracer.open_spans() == []
+    cancelled = [e for e in tracer.events
+                 if e["k"] == "E" and e["name"] == "kv_migration"
+                 and (e.get("attrs") or {}).get("cancelled")]
+    assert len(cancelled) == 2
+    assert validate_trace(to_chrome_trace(tracer.events)) == []
+
+
+def test_disconnect_timeout_closes_trace(lvlm):
+    """A consumer hang-up aborts via the pump's disconnect sweep: the
+    trace closes with the abort marker instead of leaking the span."""
+    tracer = Tracer()
+    server = lvlm.serve_async(_ec(), gen=GEN, disconnect_timeout_s=0.05,
+                              obs=tracer)
+    eng = server.engine
+    real_step = eng.step
+
+    def paced_step():
+        import time
+        time.sleep(0.02)
+        return real_step()
+
+    eng.step = paced_step
+    p0, p1 = _prompts(2, seed=7, lo=10, hi=12)
+    r_stall = Request(rid=0, tokens=p0, max_new_tokens=24)
+    r_live = Request(rid=1, tokens=p1, max_new_tokens=24)
+
+    async def drive():
+        async with server:
+            s0 = server.submit(r_stall)
+            t1 = asyncio.create_task(_consume(server.submit(r_live)))
+            got = []
+            async for tok in s0:
+                got.append(tok)
+                if len(got) == 2:
+                    await asyncio.sleep(0.5)     # consumer goes silent
+            return got, await t1, s0
+
+    got, out1, s0 = asyncio.run(drive())
+    assert s0.disconnected and len(out1) == 24
+    assert server.disconnects == 1
+    assert tracer.open_spans() == []
+    end = next(e for e in tracer.events if e["k"] == "E"
+               and e["name"] == "request" and e["rid"] == 0)
+    assert (end.get("attrs") or {}).get("aborted")
+    assert validate_trace(to_chrome_trace(tracer.events)) == []
+
+
+# -------------------------------------------- sanitizer <-> tracer cross --
+
+
+def test_sanitizer_flags_missing_span_for_live_request(lvlm):
+    tracer = Tracer()
+    eng = lvlm._serve_engine(_ec(), GEN, tracer=tracer)
+    eng.submit(Request(rid=0, tokens=_prompts(1, seed=8)[0],
+                       max_new_tokens=MAX_NEW))
+    # tamper: close the live request's span out from under it
+    tracer.span_end("request", 0, replica=0, vt=eng.clock)
+    with pytest.raises(SanitizerError, match="no open trace span"):
+        eng.step()
+
+
+def test_sanitizer_flags_orphan_span(lvlm):
+    tracer = Tracer()
+    eng = lvlm._serve_engine(_ec(), GEN, tracer=tracer)
+    eng.submit(Request(rid=0, tokens=_prompts(1, seed=9)[0],
+                       max_new_tokens=MAX_NEW))
+    # tamper: open a span for a request this replica never saw
+    tracer.span_begin("request", 99, replica=0, vt=eng.clock)
+    with pytest.raises(SanitizerError, match="orphan span"):
+        eng.step()
+
+
+def test_span_abort_closes_all_open_spans_innermost_first():
+    t = Tracer()
+    t.span_begin("request", 1, replica=0, vt=0.0)
+    t.span_begin("prefill", 1, replica=0, vt=0.1)
+    t.span_begin("request", 2, replica=0, vt=0.1)
+    t.span_abort(1, replica=0, vt=0.2, reason="test")
+    assert t.open_spans() == [(2, "request")]
+    ends = [e for e in t.events if e["k"] == "E"]
+    assert [e["name"] for e in ends] == ["prefill", "request"]
+    assert all(e["attrs"]["aborted"] and e["attrs"]["reason"] == "test"
+               for e in ends)
+    assert t.open_requests(0) == {2}
+
+
+def test_double_begin_auto_aborts_stale_span():
+    t = Tracer()
+    t.span_begin("request", 1, replica=0, vt=0.0)
+    t.span_begin("request", 1, replica=1, vt=0.5)
+    # the stale span closed (aborted), the new one is open on replica 1
+    assert t.open_spans() == [(1, "request")]
+    assert t.open_requests(1) == {1}
+    assert validate_trace(to_chrome_trace(t.events + [
+        t._event("E", "request", rid=1, replica=1, vt=0.6)])) == []
+
+
+# ------------------------------------------------------- perfetto export --
+
+
+def _tiny_trace():
+    t = Tracer()
+    t.span_begin("request", 1, replica=0, vt=0.0, prompt_len=8)
+    t.instant("first_token", 1, replica=0, vt=0.001)
+    t.slice("engine_step", 0.0, 0.002, replica=0)
+    t.slice("decode_step", 0.0, 0.002, replica=0, slot=3, rid=1)
+    t.counter("kv_committed_tokens", 12, replica=0, vt=0.002)
+    t.span_end("request", 1, replica=0, vt=0.002, tokens=4)
+    return t
+
+
+def test_chrome_trace_shape():
+    doc = to_chrome_trace(_tiny_trace().events)
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["name"] for m in meta} >= {"process_name", "thread_name"}
+    b = next(e for e in evs if e["ph"] == "b")
+    e_ = next(e for e in evs if e["ph"] == "e")
+    assert b["cat"] == e_["cat"] == "request"
+    assert b["id"] == e_["id"] == 1
+    assert b["ts"] == 0.0 and e_["ts"] == pytest.approx(2000.0)  # vt * 1e6
+    assert b["args"]["prompt_len"] == 8 and "wall_s" in b["args"]
+    lanes = {e["name"]: e["tid"] for e in evs if e["ph"] == "X"}
+    assert lanes["engine_step"] == 0 and lanes["decode_step"] == 4  # 1+slot
+    c = next(e for e in evs if e["ph"] == "C")
+    assert c["args"]["value"] == 12
+    i = next(e for e in evs if e["ph"] == "i")
+    assert i["s"] == "t"
+    # round-trips through json
+    json.loads(json.dumps(doc))
+
+
+def test_write_and_load_chrome_trace(tmp_path):
+    p = str(tmp_path / "trace.json")
+    write_chrome_trace(_tiny_trace().events, p)
+    doc = load_trace(p)
+    assert validate_trace(doc) == []
+
+
+def test_validate_catches_orphans_unbalanced_and_rewinds():
+    t = _tiny_trace()
+    orphan = [e for e in t.events
+              if not (e["k"] == "E" and e["name"] == "request")]
+    probs = validate_trace(to_chrome_trace(orphan))
+    assert any("orphan" in p for p in probs)
+    # a request timeline that rewinds its virtual clock
+    rewind = [
+        {"k": "B", "name": "request", "rid": 1, "rep": 0, "vt": 1.0,
+         "wt": 0.0},
+        {"k": "E", "name": "request", "rid": 1, "rep": 0, "vt": 0.5,
+         "wt": 1.0},
+    ]
+    probs = validate_trace(to_chrome_trace(rewind))
+    assert any("clock went backwards" in p for p in probs)
+    probs = validate_trace({"traceEvents": []})
+    assert any("no request spans" in p for p in probs)
+
+
+def test_validate_require_migrations():
+    t = _tiny_trace()                 # a request that never migrated
+    probs = validate_trace(to_chrome_trace(t.events),
+                           require_migrations=True)
+    assert any("migration" in p for p in probs)
+
+
+def test_validate_cli(tmp_path):
+    from repro.obs import validate as vmod
+    good = str(tmp_path / "good.json")
+    write_chrome_trace(_tiny_trace().events, good)
+    assert vmod.main([good]) == 0
+    bad = str(tmp_path / "bad.json")
+    t = _tiny_trace()
+    with open(bad, "w", encoding="utf-8") as f:
+        json.dump(to_chrome_trace(t.events[:-1]), f)   # drop the close
+    assert vmod.main([bad]) != 0
+
+
+def test_jsonl_sink_streams_and_loads(tmp_path):
+    p = str(tmp_path / "events.jsonl")
+    t = Tracer()
+    sink = JsonlSink(p)
+    t.add_sink(sink)
+    t.span_begin("request", 1, replica=0, vt=0.0)
+    t.span_end("request", 1, replica=0, vt=0.1)
+    sink.close()
+    lines = [json.loads(line) for line in open(p, encoding="utf-8")]
+    assert lines == t.events
+    assert validate_trace(load_trace(p)) == []   # jsonl auto-converts
+
+
+# --------------------------------------------------------- prometheus --
+
+
+def test_server_metrics_snapshot(lvlm):
+    server = lvlm.serve_async(_ec(), gen=GEN)
+    got = _drive_all(server, _reqs(_prompts(3, seed=10)))
+    assert all(len(o) == MAX_NEW for o in got.values())
+    text = server.metrics_snapshot()
+    assert "# TYPE repro_requests_finished_total counter" in text
+    assert "repro_requests_finished_total 3.0" in text
+    assert 'repro_ttft_seconds{quantile="0.5"}' in text
+    assert "repro_ttft_seconds_count 3" in text
+    assert "repro_kv_committed_tokens 0.0" in text
+    assert "repro_admitted_total 3.0" in text
+    # HELP/TYPE headers appear once per family
+    assert text.count("# TYPE repro_requests_finished_total") == 1
+
+
+def test_router_metrics_snapshot_labels_replicas(lvlm):
+    router = lvlm.serve_cluster(2, _ec(cost=COST), gen=GEN,
+                                roles=["prefill", "decode"])
+    got = _drive_all(router, _reqs(_prompts(2, seed=11)))
+    assert all(len(o) == MAX_NEW for o in got.values())
+    text = router.metrics_snapshot()
+    assert 'replica="0"' in text and 'replica="1"' in text
+    assert "repro_migrations_total 2.0" in text
+    assert "repro_migrated_kv_tokens_total" in text
+    assert 'repro_migrated_in_total{replica="1"} 2.0' in text
+    # parses as prometheus text: every non-comment line is name{...} value
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name and float(value) is not None
+
+
+# ----------------------------------------------------- stats helper --
+
+
+def test_stats_helper_handles_empty_and_matches_registry():
+    assert mean_or_none([]) is None
+    assert mean_or_none([1.0, 3.0]) == 2.0
+    s = percentile_summary([], "ttft")
+    assert s["ttft_p50"] is None and s["ttft_p95"] is None
+    out = summarize_records([])
+    assert out["finished"] == 0 and out["ttft_p50"] is None
+    # the registry summary IS the shared helper's output (plus engine
+    # extras) -- the dedup satellite's contract
+    reg = MetricsRegistry()
+    req = Request(rid=0, tokens=[1, 2, 3], max_new_tokens=2)
+    req.first_token_time, req.finish_time = 0.01, 0.02
+    req.submit_time, req.start_time = 0.0, 0.0
+    req.generated = [5, 6]
+    rec = reg.observe(req, queue_wait=0.002, decoder="greedy")
+    assert rec.tokens == 2
+    assert reg.summary() == summarize_records(reg.records)
+
+
+# ----------------------------------------------------- trace_report --
+
+
+def _load_trace_report():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    spec = importlib.util.spec_from_file_location(
+        "trace_report", os.path.join(root, "scripts", "trace_report.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_trace_report_attribution_sums_to_lifetime(lvlm, tmp_path, capsys):
+    tracer = Tracer()
+    router = lvlm.serve_cluster(
+        2, _ec(cost=COST, scheduler="chunked", chunk_size=8),
+        gen=GEN, roles=["prefill", "decode"], obs=tracer)
+    got = _drive_all(router, _reqs(_prompts(3, seed=12, lo=20, hi=30)))
+    assert all(len(o) == MAX_NEW for o in got.values())
+    p = str(tmp_path / "events.jsonl")
+    tracer.write_jsonl(p)
+    tr = _load_trace_report()
+    request, stages = tr.attribute(tr.load_events(p))
+    assert set(request) == set(got)
+    for rid, (b, e, aborted) in request.items():
+        assert not aborted
+        named = sum(stages[rid].values())
+        assert 0.0 <= named <= (e - b) + 1e-9
+        assert stages[rid]["kv_migration"] > 0.0    # it really migrated
+    assert tr.main([p]) == 0
+    out = capsys.readouterr().out
+    assert "kv_migration" in out and "engine occupancy" in out
