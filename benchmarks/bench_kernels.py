@@ -1,20 +1,31 @@
-"""Benchmark: hardware-aware attention (survey dim 3c).
+"""Benchmark: hardware-aware attention kernels (survey dim 3c).
 
-On this CPU container the Pallas kernels run in interpret mode (orders of
-magnitude slower than compiled -- correctness only), so the timing rows
-compare the XLA-compiled blockwise flash-style path against naive
-materialized attention, plus an interpret-mode allclose spot check. True
-kernel timing belongs on a TPU runtime (EXPERIMENTS.md §Perf).
+On this CPU container the Pallas kernels run in interpret mode (orders
+of magnitude slower than compiled -- correctness-grade timing only), so
+the XLA-compiled blockwise flash-style path carries the meaningful
+timing rows; the Pallas rows exist to keep the TRAJECTORY measured (the
+same rows on a TPU runtime become the real kernel baseline) plus an
+interpret-mode allclose spot check. True kernel timing belongs on a TPU
+runtime (EXPERIMENTS.md §Perf).
+
+``--emit-bench BENCH_kernels.json`` writes the schema-v1 per-kernel
+rows (min/mean/std us per call, warmup-correct -- see
+``benchmarks.common.time_jit``) that ``python -m repro.obs.regress``
+gates CI against.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_jit
+from benchmarks.common import Timing, emit, time_jit
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
 from repro.models.attention import blockwise_sdpa
 
 
@@ -28,7 +39,15 @@ def _naive(q, k, v, pos):
     return jnp.moveaxis(o, 3, 1)
 
 
-def run() -> None:
+def _row(rows, kernel: str, backend: str, shape: str, t: Timing,
+         iters: int, derived: str = "") -> None:
+    rows.append({"kernel": kernel, "backend": backend, "shape": shape,
+                 "us_per_call": t.stats(), "iters": iters})
+    emit(f"kern/{kernel}/{shape}", t, derived)
+
+
+def bench_blockwise(rows) -> None:
+    """XLA blockwise flash-style path vs naive materialized attention."""
     rng = np.random.RandomState(0)
     for s in (512, 2048):
         b, kvh, g, d = 1, 2, 2, 64
@@ -36,24 +55,93 @@ def run() -> None:
         k = jnp.asarray(rng.randn(b, s, kvh, d), jnp.float32)
         v = jnp.asarray(rng.randn(b, s, kvh, d), jnp.float32)
         pos = jnp.arange(s)
-        us_naive = time_jit(jax.jit(lambda *a: _naive(*a, pos)), q, k, v,
-                            iters=3)
-        us_block = time_jit(jax.jit(
+        t_naive = time_jit(jax.jit(lambda *a: _naive(*a, pos)), q, k, v,
+                           iters=3)
+        t_block = time_jit(jax.jit(
             lambda qq, kk, vv: blockwise_sdpa(qq, kk, vv, q_pos=pos,
                                               k_pos=pos, causal=True,
                                               block_k=512)), q, k, v,
             iters=3)
-        emit(f"kern/flash_xla/s{s}", us_block,
-             f"naive_us={us_naive:.0f};peak_mem_ratio~{512 / s:.2f}")
-    # interpret-mode correctness spot check (the TPU kernel's oracle gate)
+        shape = f"b{b}_kvh{kvh}_g{g}_s{s}_d{d}"
+        _row(rows, "blockwise_sdpa", "xla", shape, t_block, 3,
+             f"naive_us={t_naive:.0f}")
+        _row(rows, "naive_sdpa", "xla", shape, t_naive, 3)
+
+
+def bench_flash(rows) -> None:
+    """Pallas flash-attention prefill kernel (interpret mode on CPU)."""
+    rng = np.random.RandomState(1)
+    b, h, kvh, d = 1, 4, 2, 32
+    for s in (64, 128):
+        q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, kvh, s, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, kvh, s, d), jnp.float32)
+        t = time_jit(lambda: flash_attention(q, k, v, causal=True,
+                                             block_q=32, block_k=32),
+                     iters=3)
+        _row(rows, "flash_attention", "pallas_interpret",
+             f"b{b}_h{h}_s{s}_d{d}", t, 3)
+
+
+def bench_paged(rows) -> None:
+    """Pallas paged decode-attention kernel (interpret mode on CPU)."""
+    rng = np.random.RandomState(2)
+    b, h, kvh, d, page = 2, 4, 2, 32, 16
+    for pps in (4, 8):                 # pages per sequence
+        P = b * pps
+        q = jnp.asarray(rng.randn(b, h, d), jnp.float32)
+        kp = jnp.asarray(rng.randn(P, page, kvh, d), jnp.float32)
+        vp = jnp.asarray(rng.randn(P, page, kvh, d), jnp.float32)
+        bt = jnp.asarray(rng.choice(P, (b, pps), replace=False),
+                         jnp.int32)
+        sl = jnp.asarray(rng.randint(page, pps * page, b), jnp.int32)
+        t = time_jit(lambda: paged_attention(q, kp, vp, bt, sl), iters=3)
+        _row(rows, "paged_attention", "pallas_interpret",
+             f"b{b}_h{h}_ctx{pps * page}_d{d}", t, 3)
+
+
+def check_flash_vs_ref(rows) -> None:
+    """Interpret-mode correctness spot check (the TPU kernel's oracle
+    gate); ``max_err`` is informational to the regress gate."""
+    rng = np.random.RandomState(3)
     q = jnp.asarray(rng.randn(1, 4, 64, 32), jnp.float32)
     k = jnp.asarray(rng.randn(1, 2, 64, 32), jnp.float32)
     v = jnp.asarray(rng.randn(1, 2, 64, 32), jnp.float32)
     out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
     expect = ref.flash_attention_ref(q, k, v, causal=True)
     err = float(jnp.abs(out - expect).max())
+    rows.append({"kernel": "flash_attention", "check": "allclose_vs_ref",
+                 "max_err": err})
     emit("kern/pallas_interpret_allclose", 0.0, f"max_err={err:.2e}")
 
 
+def run(emit_bench: str = None) -> None:
+    rows = []
+    bench_blockwise(rows)
+    bench_flash(rows)
+    bench_paged(rows)
+    check_flash_vs_ref(rows)
+    if emit_bench:
+        doc = {"schema_version": 1, "bench": "kernels",
+               "backend_note": "pallas rows are interpret-mode on CPU "
+                               "(correctness-grade; recapture baselines "
+                               "per runtime)",
+               "rows": rows}
+        with open(emit_bench, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {emit_bench} ({len(rows)} rows)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-bench", metavar="PATH",
+                    help="write schema-v1 per-kernel timing rows "
+                         "(BENCH_kernels.json) for repro.obs.regress")
+    args = ap.parse_args(argv)
+    run(emit_bench=args.emit_bench)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

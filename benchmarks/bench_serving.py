@@ -248,9 +248,13 @@ def wall_baseline(lvlm: LVLM, out_path: str, trace_out=None) -> None:
                                 {p50,p95}
       wall                      measured perf_counter: same keys --
                                 the smoke-model profiling baseline
+      profile                   Profiler.bench_record(): per hot-path
+                                site call counts + wall self/total and
+                                virtual seconds
     """
-    from repro.obs import Tracer, write_chrome_trace
+    from repro.obs import Profiler, Tracer, write_chrome_trace
     tracer = Tracer()
+    profiler = Profiler()
     rng = np.random.RandomState(7)
     reqs = _reqs(lvlm.cfg, 16, seed=8, lo=8, hi=24, new=8)
     arrivals = np.cumsum(rng.exponential(1 / 2000.0, size=len(reqs)))
@@ -262,7 +266,7 @@ def wall_baseline(lvlm: LVLM, out_path: str, trace_out=None) -> None:
                      cost=CostModel(kv_bytes_per_token=100_000)),
         gen=GenerationConfig(decoder="greedy", temperature=0.0,
                              max_new_tokens=8),
-        routing="least_kv", obs=tracer)
+        routing="least_kv", obs=tracer, profile=profiler)
 
     async def drive():
         async def consume(r):
@@ -305,6 +309,7 @@ def wall_baseline(lvlm: LVLM, out_path: str, trace_out=None) -> None:
             "tpot_s": {"p50": _p(wall["tpot"], 50),
                        "p95": _p(wall["tpot"], 95)},
         },
+        "profile": profiler.bench_record(),
     }
     with open(out_path, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=1, default=float)

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Sequence
 
 import jax
 
@@ -15,16 +15,45 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(row, flush=True)
 
 
-def time_jit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-time (us) of a jitted callable on the local device."""
+class Timing(float):
+    """Per-call wall time in microseconds. The float VALUE is the
+    minimum over the measured iterations (the least-noise statistic, so
+    existing ``emit(name, us)`` call sites keep working); ``min_us`` /
+    ``mean_us`` / ``std_us`` carry the full spread for BENCH_*.json
+    rows."""
+
+    min_us: float
+    mean_us: float
+    std_us: float
+
+    def __new__(cls, samples_us: Sequence[float]) -> "Timing":
+        mn = min(samples_us)
+        mean = sum(samples_us) / len(samples_us)
+        t = super().__new__(cls, mn)
+        t.min_us = mn
+        t.mean_us = mean
+        t.std_us = (sum((x - mean) ** 2 for x in samples_us)
+                    / len(samples_us)) ** 0.5
+        return t
+
+    def stats(self) -> Dict[str, float]:
+        return {"min": self.min_us, "mean": self.mean_us,
+                "std": self.std_us}
+
+
+def time_jit(fn: Callable, *args, warmup: int = 2,
+             iters: int = 5) -> Timing:
+    """Wall-time stats (us) of a jitted callable on the local device.
+
+    Every warmup call is synchronized with ``block_until_ready`` so
+    compilation and first-dispatch cost can never leak into the measured
+    iterations (an async-dispatch backend would otherwise overlap
+    unfinished warmup work with the first timed call)."""
     for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    times = []
+        jax.block_until_ready(fn(*args))
+    samples = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return Timing(samples)

@@ -87,11 +87,12 @@ def occupancy(events):
             for rep in sorted(set(lo) | set(busy))}
 
 
-def report(events, out=sys.stdout):
+def _aggregate(events):
+    """Shared stage aggregation: (n, aborted, totals, lifetimes) or None
+    when the log holds no closed request spans."""
     request, stages = attribute(events)
     if not request:
-        print("no closed request spans in the event log", file=out)
-        return 1
+        return None
     totals = defaultdict(list)       # stage -> per-request seconds
     lifetimes = []
     for rid, (b, e, _aborted) in sorted(request.items()):
@@ -103,8 +104,55 @@ def report(events, out=sys.stdout):
             totals[st].append(s)
             named += s
         totals["decode"].append(max(0.0, life - named))
-    n = len(lifetimes)
     aborted = sum(1 for _, (_, _, a) in request.items() if a)
+    return len(lifetimes), aborted, totals, lifetimes
+
+
+def _wall_virtual_ratio(events):
+    wall = [ev["wt"] for ev in events if ev.get("wt") is not None]
+    vts = [ev["vt"] for ev in events if ev.get("vt") is not None]
+    if wall and vts and max(vts) > min(vts):
+        return (max(wall) - min(wall)) / (max(vts) - min(vts))
+    return None
+
+
+def report_json(events):
+    """Machine-readable stage-share attribution (``--json``): the same
+    aggregation as the table, shaped so ``python -m repro.obs.regress``
+    can diff two traced runs (``*_s`` leaves gate, ``share`` does not)."""
+    agg = _aggregate(events)
+    if agg is None:
+        return None
+    n, aborted, totals, lifetimes = agg
+    grand = sum(lifetimes) or 1.0
+    doc = {
+        "schema_version": 1,
+        "requests": n,
+        "aborted": aborted,
+        "events": len(events),
+        "stages": {},
+        "lifetime": {"mean_s": sum(lifetimes) / n,
+                     "p50_s": _pct(lifetimes, 50),
+                     "p95_s": _pct(lifetimes, 95)},
+        "occupancy": {str(rep): frac
+                      for rep, frac in occupancy(events).items()},
+        "wall_virtual_ratio": _wall_virtual_ratio(events),
+    }
+    for st in STAGES + ("decode",):
+        vals = totals[st]
+        doc["stages"][st] = {"mean_s": sum(vals) / n,
+                             "p50_s": _pct(vals, 50),
+                             "p95_s": _pct(vals, 95),
+                             "share": sum(vals) / grand}
+    return doc
+
+
+def report(events, out=sys.stdout):
+    agg = _aggregate(events)
+    if agg is None:
+        print("no closed request spans in the event log", file=out)
+        return 1
+    n, aborted, totals, lifetimes = agg
     grand = sum(lifetimes) or 1.0
     wall = [ev["wt"] for ev in events]
     vts = [ev["vt"] for ev in events if ev.get("vt") is not None]
@@ -134,8 +182,20 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("events", help="JSONL event log (--trace-events / "
                                    "Tracer.write_jsonl / JsonlSink)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the attribution as JSON (diffable with "
+                         "python -m repro.obs.regress)")
     args = ap.parse_args(argv)
-    return report(load_events(args.events))
+    events = load_events(args.events)
+    if args.json:
+        doc = report_json(events)
+        if doc is None:
+            print("no closed request spans in the event log",
+                  file=sys.stderr)
+            return 1
+        print(json.dumps(doc, indent=1, sort_keys=True))
+        return 0
+    return report(events)
 
 
 if __name__ == "__main__":

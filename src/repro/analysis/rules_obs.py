@@ -14,6 +14,11 @@ O002  No event emission inside a Pallas kernel body: tracer calls in a
       trace time (or never, on cached executables) -- they measure
       nothing and poison the zero-overhead-when-off guarantee. Emit
       from the host wrapper around the ``pallas_call``.
+O003  Profiler-site pairing: every ``profiler.site_begin(...)`` must
+      reach a matching ``site_end`` on every CFG path of the SAME
+      function (profiler sites measure a synchronous region, so unlike
+      trace spans they never pair across function boundaries). A leaked
+      begin corrupts the self/total attribution of every enclosing site.
 
 Site matching understands the ``if <x>.enabled:`` guard idiom: the
 guard's ``if`` header is the CFG site, so the infeasible
@@ -28,7 +33,9 @@ from typing import Iterable, List
 from repro.analysis.cfg import ENTRY, EXIT, build_cfg, function_defs
 from repro.analysis.findings import Finding
 from repro.analysis.registry import Rule, register
-from repro.analysis.tables import (SPAN_BEGIN_CALLS, SPAN_CLOSE_CALLS,
+from repro.analysis.tables import (PROFILE_BEGIN_CALLS,
+                                   PROFILE_CLOSE_CALLS, PROFILE_SCOPES,
+                                   SPAN_BEGIN_CALLS, SPAN_CLOSE_CALLS,
                                    SPAN_SCOPES, TRACER_EMIT_CALLS,
                                    _own_nodes)
 
@@ -66,6 +73,46 @@ def _span_site(stmt: ast.stmt, names) -> bool:
                for n in _own_nodes(stmt))
 
 
+def _pairing_findings(rule: Rule, tree: ast.AST, path: str, scopes,
+                      begin_calls, close_calls, module_msg: str,
+                      leak_msg: str) -> List[Finding]:
+    """Shared begin/close pairing walk (O001 trace spans, O003 profiler
+    sites): module-pairing scopes require at least one close site in the
+    module; per-function scopes run the CFG walk -- no path from a begin
+    site to the function exit may avoid every close site. Message
+    templates take ``{fn}`` (function name) / ``{scope}`` (description)."""
+    out: List[Finding] = []
+    for scope in scopes:
+        if not path.endswith(scope.path_suffix):
+            continue
+        if scope.module_pairing:
+            stmts = [n for n in ast.walk(tree) if isinstance(n, ast.stmt)]
+            begins = [s for s in stmts if _span_site(s, begin_calls)]
+            if begins and not any(_span_site(s, close_calls)
+                                  for s in stmts):
+                out.append(rule.finding(
+                    path, begins[0].lineno,
+                    module_msg.format(scope=scope.description)))
+            continue
+        for fn in function_defs(tree):
+            body = [n for n in ast.walk(fn)
+                    if isinstance(n, ast.stmt) and n is not fn]
+            begins = [s for s in body if _span_site(s, begin_calls)]
+            if not begins:
+                continue
+            ok = {s for s in body if _span_site(s, close_calls)}
+            graph = build_cfg(fn)
+            for b in begins:
+                if b not in graph.succ:
+                    continue                # nested def: out of this walk
+                reaches = graph.path_avoiding(ENTRY, b, ok)
+                leaks = graph.path_avoiding(b, EXIT, ok - {b})
+                if reaches and leaks:
+                    out.append(rule.finding(
+                        path, b.lineno, leak_msg.format(fn=fn.name)))
+    return out
+
+
 @register
 class SpanPairingRule(Rule):
     rule_id = "O001"
@@ -78,44 +125,36 @@ class SpanPairingRule(Rule):
         return any(path.endswith(s.path_suffix) for s in SPAN_SCOPES)
 
     def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
-        out: List[Finding] = []
-        for scope in SPAN_SCOPES:
-            if not path.endswith(scope.path_suffix):
-                continue
-            if scope.module_pairing:
-                stmts = [n for n in ast.walk(tree)
-                         if isinstance(n, ast.stmt)]
-                begins = [s for s in stmts
-                          if _span_site(s, SPAN_BEGIN_CALLS)]
-                if begins and not any(_span_site(s, SPAN_CLOSE_CALLS)
-                                      for s in stmts):
-                    out.append(self.finding(
-                        path, begins[0].lineno,
-                        "module opens trace spans but contains no "
-                        "span_end/span_abort site -- every span it "
-                        f"begins is an orphan ({scope.description})"))
-                continue
-            for fn in function_defs(tree):
-                body = [n for n in ast.walk(fn)
-                        if isinstance(n, ast.stmt) and n is not fn]
-                begins = [s for s in body
-                          if _span_site(s, SPAN_BEGIN_CALLS)]
-                if not begins:
-                    continue
-                ok = {s for s in body if _span_site(s, SPAN_CLOSE_CALLS)}
-                graph = build_cfg(fn)
-                for b in begins:
-                    if b not in graph.succ:
-                        continue            # nested def: out of this walk
-                    reaches = graph.path_avoiding(ENTRY, b, ok)
-                    leaks = graph.path_avoiding(b, EXIT, ok - {b})
-                    if reaches and leaks:
-                        out.append(self.finding(
-                            path, b.lineno,
-                            f"span opened here in `{fn.name}` can reach "
-                            "a function exit without span_end/"
-                            "span_abort -- orphan span on that path"))
-        return out
+        return _pairing_findings(
+            self, tree, path, SPAN_SCOPES, SPAN_BEGIN_CALLS,
+            SPAN_CLOSE_CALLS,
+            "module opens trace spans but contains no span_end/"
+            "span_abort site -- every span it begins is an orphan "
+            "({scope})",
+            "span opened here in `{fn}` can reach a function exit "
+            "without span_end/span_abort -- orphan span on that path")
+
+
+@register
+class ProfileSitePairingRule(Rule):
+    rule_id = "O003"
+    family = "O"
+    severity = "error"
+    description = ("a profiler site_begin can reach a function exit "
+                   "without a matching site_end")
+
+    def applies(self, path: str) -> bool:
+        return any(path.endswith(s.path_suffix) for s in PROFILE_SCOPES)
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
+        return _pairing_findings(
+            self, tree, path, PROFILE_SCOPES, PROFILE_BEGIN_CALLS,
+            PROFILE_CLOSE_CALLS,
+            "module opens profiler sites but contains no site_end "
+            "({scope})",
+            "profiler site opened here in `{fn}` can reach a function "
+            "exit without site_end -- the open frame corrupts self/"
+            "total attribution for every later site")
 
 
 def _mentions_tracer(expr: ast.expr) -> bool:

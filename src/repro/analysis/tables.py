@@ -336,6 +336,19 @@ SPAN_SCOPES = [
               "coroutine on every path, including cancellation"),
 ]
 
+# repro.obs.profile hot-path sites (O003). Unlike trace spans, profiler
+# sites NEVER cross a function boundary -- wall time is measured around a
+# synchronous region -- so every scope runs the per-function CFG walk.
+PROFILE_BEGIN_CALLS = ("site_begin",)
+PROFILE_CLOSE_CALLS = ("site_end",)
+
+PROFILE_SCOPES = [
+    SpanScope("core/serving/engine.py", False,
+              "profiler sites (prefill_forward, decode launch, compress, "
+              "kv transfer, prefix tier) open and close inside one "
+              "method on every path"),
+]
+
 # ---------------------------------------------------------- A: async tables --
 # Blocking calls that stall the event loop when issued inside async def.
 BLOCKING_CALLS = {

@@ -161,6 +161,21 @@ class LVLM:
             return Tracer()
         return obs
 
+    @staticmethod
+    def _resolve_profile(profile):
+        """``profile=`` facade knob -> a ``repro.obs.Profiler`` or None.
+
+        Mirrors ``_resolve_obs``: ``None``/``False`` -> no profiling (the
+        engine holds NULL_PROFILER and every hot-path site short-circuits);
+        ``True`` -> a fresh ``Profiler``; a ``Profiler`` instance is used
+        as-is (share one across servers to merge site histograms)."""
+        if profile is None or profile is False:
+            return None
+        if profile is True:
+            from repro.obs import Profiler
+            return Profiler()
+        return profile
+
     def _requests(self, prompts, gen, visual_embeds) -> List[Request]:
         n = len(prompts)
         if visual_embeds is None:
@@ -255,7 +270,7 @@ class LVLM:
                       gen: Optional[GenerationConfig] = None,
                       draft: Optional["LVLM"] = None,
                       compressors: Optional[Dict] = None,
-                      tracer=None) -> Engine:
+                      tracer=None, profiler=None) -> Engine:
         """Serving-engine wiring shared by ``serve`` (sync, closed-loop)
         and ``serve_async`` (streaming, open-loop): resolve the default
         strategy + generation knobs onto the EngineConfig and register
@@ -278,14 +293,15 @@ class LVLM:
         return Engine(self.model, self.params, ec,
                       decoder=decoders.get(ec.decoder), decoders=decoders,
                       compressor=make_compressor(g.compression),
-                      compressors=compressors, tracer=tracer)
+                      compressors=compressors, tracer=tracer,
+                      profiler=profiler)
 
     def serve(self, requests: List[Request],
               engine_cfg: Optional[EngineConfig] = None,
               gen: Optional[GenerationConfig] = None,
               draft: Optional["LVLM"] = None,
               compressors: Optional[Dict] = None,
-              obs=None) -> ServeResult:
+              obs=None, profile=None) -> ServeResult:
         """Full serving run: scheduler + batching + virtual-clock metrics.
 
         ``engine_cfg`` keeps its internal-layer knobs (scheduler, batch,
@@ -315,7 +331,8 @@ class LVLM:
         """
         eng = self._serve_engine(engine_cfg, gen, draft,
                                  compressors=compressors,
-                                 tracer=self._resolve_obs(obs))
+                                 tracer=self._resolve_obs(obs),
+                                 profiler=self._resolve_profile(profile))
         for r in requests:
             eng.submit(r)
         stats = dict(eng.run(), **eng.decoder_stats())
@@ -332,7 +349,7 @@ class LVLM:
                     admission=None, metrics=None, compressors=None,
                     pacing: str = "virtual", pacing_scale: float = 1.0,
                     disconnect_timeout_s: Optional[float] = None,
-                    obs=None) -> AsyncLVLMServer:
+                    obs=None, profile=None) -> AsyncLVLMServer:
         """Async streaming server over the same engine wiring as ``serve``.
 
         Returns a ``repro.serving.AsyncLVLMServer``: a background pump over
@@ -361,7 +378,8 @@ class LVLM:
                                metrics=metrics, compressors=compressors,
                                pacing=pacing, pacing_scale=pacing_scale,
                                disconnect_timeout_s=disconnect_timeout_s,
-                               tracer=self._resolve_obs(obs))
+                               tracer=self._resolve_obs(obs),
+                               profiler=self._resolve_profile(profile))
 
     def serve_cluster(self, replicas=2,
                       engine_cfg: Optional[EngineConfig] = None,
@@ -373,7 +391,7 @@ class LVLM:
                       pacing: str = "virtual",
                       pacing_scale: float = 1.0,
                       disconnect_timeout_s: Optional[float] = None,
-                      obs=None) -> "Router":
+                      obs=None, profile=None) -> "Router":
         """Multi-engine router: N async server replicas behind ONE submit
         surface (``repro.cluster.Router``), with pluggable routing.
 
@@ -420,8 +438,10 @@ class LVLM:
             else ["unified"] * len(specs)
         # ONE tracer for the whole fleet: a migrated request's spans land
         # in a single contiguous trace; the Router assigns each engine its
-        # replica track index
+        # replica track index. Same for the profiler: fleet-merged site
+        # histograms, rendered once in Router.metrics_snapshot()
         tracer = self._resolve_obs(obs)
+        profiler = self._resolve_profile(profile)
         servers = []
         for i, spec in enumerate(specs):
             unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission",
@@ -438,6 +458,6 @@ class LVLM:
                 compressors=spec.get("compressors", compressors),
                 pacing=pacing, pacing_scale=pacing_scale,
                 disconnect_timeout_s=disconnect_timeout_s,
-                obs=tracer))
+                obs=tracer, profile=profiler))
         return Router(servers, routing=routing, roles=rep_roles,
                       shared_prefix=shared_prefix)

@@ -556,6 +556,13 @@ class Router:
             prom.gauge("prefix_tier_entries",
                        "Entries resident in the shared prefix tier.",
                        stats["entries"])
+        # the fleet shares ONE profiler (like the tracer), so its site
+        # histograms render once at router level, not per replica
+        profiler = self.replicas[0].server.profiler if self.replicas \
+            else None
+        if profiler is not None and profiler.enabled:
+            from repro.obs.profile import profile_families
+            profile_families(prom, profiler)
         return "".join(parts) + prom.render()
 
 

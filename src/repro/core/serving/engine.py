@@ -183,7 +183,8 @@ def _slot_set(pool, slot, one):
 class Engine:
     def __init__(self, model, params, ec: EngineConfig, *, decoder=None,
                  decoders: Optional[Dict] = None, compressor=None,
-                 compressors: Optional[Dict] = None, tracer=None):
+                 compressors: Optional[Dict] = None, tracer=None,
+                 profiler=None):
         cfg = model.cfg
         self.ec = ec
         self.params = params
@@ -313,6 +314,14 @@ class Engine:
             tracer = NULL_TRACER
         self.tracer = tracer
         self.trace_replica = 0
+
+        # continuous profiling: same zero-overhead-when-off discipline as
+        # the tracer -- every hot-path site guards on ``profiler.enabled``
+        # and sites only read clocks, so profiled runs stay bit-identical
+        if profiler is None:
+            from repro.obs.profile import NULL_PROFILER
+            profiler = NULL_PROFILER
+        self.profiler = profiler
 
         # runtime sanitizer: resolved once (config wins over env)
         if ec.sanitize is not None:
@@ -570,8 +579,12 @@ class Engine:
                 "or per-slot decoder state)")
         slot = req._slot
         pos = int(self.slot_pos[slot])
+        if self.profiler.enabled:
+            self.profiler.site_begin("kv_export")
         snap = jax.tree.map(lambda a: a[:, :, :pos],
                             _slot_get(self.pool, slot))
+        if self.profiler.enabled:
+            self.profiler.site_end("kv_export")
         ticket = {
             "rid": rid, "req": req, "snap": snap, "pos": pos,
             "last_tok": int(self.slot_last_tok[slot]),
@@ -685,7 +698,14 @@ class Engine:
         slot = self._free_slot()
         req._slot = slot
         self.slot_req[slot] = req
+        if self.profiler.enabled:
+            self.profiler.site_begin("kv_transfer")
         self._install_snap(slot, ticket["snap"])
+        if self.profiler.enabled:
+            # virtual attribution: the modeled KV-link transfer this
+            # import pays on the target clock (cf. ``ready_at``)
+            self.profiler.site_end(
+                "kv_transfer", vt=self.ec.cost.transfer_time(pos))
         self.slot_pos[slot] = pos
         self.slot_last_tok[slot] = ticket["last_tok"]
         self.slot_nv[slot] = ticket["nv"]
@@ -738,15 +758,25 @@ class Engine:
                 best_k, best = k, hit
                 break
         if self.prefix_share is not None:
+            if self.profiler.enabled:
+                self.profiler.site_begin("prefix_tier_probe")
             rk, rsnap = self.prefix_share.lookup(v, t, block=bs, touch=touch)
+            if self.profiler.enabled:
+                self.profiler.site_end("prefix_tier_probe")
             if rk > best_k:
                 # remote hit beats the local one: install it locally (one
                 # modeled KV-link transfer, charged to this step's clock)
                 # so later lookups here are local
                 if touch:
+                    if self.profiler.enabled:
+                        self.profiler.site_begin("prefix_tier_install")
                     self._prefix_store((v, t[:rk]), rsnap, rk)
                     self._iter_transfer_cost += self.ec.cost.transfer_time(rk)
                     self.remote_prefix_hits += 1
+                    if self.profiler.enabled:
+                        self.profiler.site_end(
+                            "prefix_tier_install",
+                            vt=self.ec.cost.transfer_time(rk))
                 return rk, (rsnap, rk)
         if best is not None:
             if touch:
@@ -769,7 +799,11 @@ class Engine:
         if self.prefix_share is not None:
             # publish to the cluster-shared tier: a sibling replica's next
             # prefill of this prefix short-circuits via the tier
+            if self.profiler.enabled:
+                self.profiler.site_begin("prefix_tier_install")
             self.prefix_share.insert(key[0], key[1], snap, k)
+            if self.profiler.enabled:
+                self.profiler.site_end("prefix_tier_install")
 
     def _prefix_store(self, key: Tuple, snap, k: int) -> None:
         """Insert an entry into the LOCAL prefix cache with LRU eviction
@@ -819,6 +853,12 @@ class Engine:
         n = min(n, len(req.tokens) - req.prefill_done)
         if n <= 0:
             return
+        first_chunk = req.prefill_done == 0
+        # hot-path site: the whole chunk (compression, prefix probe and
+        # forward) -- nested sites (compress, prefix_tier_*) subtract from
+        # this site's SELF time, leaving the forward pass itself
+        if self.profiler.enabled:
+            self.profiler.site_begin("prefill_forward")
         comp_name = getattr(req, "_comp_name", None) \
             or self._default_comp_name
         if req.prefill_done == 0:
@@ -843,6 +883,8 @@ class Engine:
                                            replica=self.trace_replica,
                                            vt=self.clock, strategy=comp_name,
                                            nv_in=nv_in)
+                if self.profiler.enabled:
+                    self.profiler.site_begin("compress")
                 if getattr(comp, "encoder_active", True):
                     # the query embed is only built for strategies that
                     # consume it (custom strategies default to yes)
@@ -851,6 +893,8 @@ class Engine:
                     ve_j, _, _ = comp.compress_prefill(
                         jnp.asarray(ve)[None], query=q)
                     ve = np.asarray(ve_j[0])
+                if self.profiler.enabled:
+                    self.profiler.site_end("compress")
                 cnt = self._comp_counts.setdefault(comp_name, [0, 0])
                 cnt[0] += nv_in
                 cnt[1] += len(ve)
@@ -949,6 +993,12 @@ class Engine:
             if req in self.waiting:
                 self.waiting.remove(req)
             self.running.append(req)
+        if self.profiler.enabled:
+            # virtual attribution: the chunk's share of this step's
+            # modeled prefill cost (visual tokens enter on chunk 0)
+            nv_chunk = int(self.slot_nv[slot]) if first_chunk else 0
+            self.profiler.site_end(
+                "prefill_forward", vt=ec.cost.prefill_time(n + nv_chunk))
 
     # ------------------------------------------------------ KV compaction --
     def _compact_slot(self, slot: int, selector: str, budget: int) -> None:
@@ -1016,12 +1066,18 @@ class Engine:
         for name, group in groups.items():
             dec = self._decoders[name]
             self._iter_decode_cost = None
+            if self.profiler.enabled:
+                self.profiler.site_begin(f"decode:{name}")
             emitted_all.update(dec.engine_decode(self, group))
             if self._iter_decode_cost is None:
                 ctx = float(np.mean([self.slot_pos[r._slot] for r in group]))
                 cost = self.ec.cost.decode_step_time(len(group), ctx)
             else:
                 cost = self._iter_decode_cost
+            if self.profiler.enabled:
+                # per-group launch: wall covers the decoder's jitted
+                # forward(s); virtual is the group's true modeled cost
+                self.profiler.site_end(f"decode:{name}", vt=cost)
             total_cost += cost
             self.group_costs[name] = self.group_costs.get(name, 0.0) + cost
             if self.tracer.enabled:

@@ -11,6 +11,8 @@ Enable via the facade: ``lvlm.serve_async(..., obs=True)`` or pass a
 every instrumentation site short-circuits on ``tracer.enabled``.
 """
 from repro.obs.perfetto import to_chrome_trace, write_chrome_trace
+from repro.obs.profile import (NULL_PROFILER, NullProfiler, Profiler,
+                               profile_families)
 from repro.obs.stats import (mean_or_none, percentile_summary,
                              summarize_records)
 from repro.obs.trace import NULL_TRACER, JsonlSink, NullTracer, Tracer
@@ -18,6 +20,7 @@ from repro.obs.validate import load_trace, validate_trace
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "JsonlSink",
+    "Profiler", "NullProfiler", "NULL_PROFILER", "profile_families",
     "to_chrome_trace", "write_chrome_trace",
     "summarize_records", "percentile_summary", "mean_or_none",
     "load_trace", "validate_trace",

@@ -146,15 +146,18 @@ class AsyncLVLMServer:
                  compressors: Optional[Dict] = None,
                  pacing: str = "virtual", pacing_scale: float = 1.0,
                  disconnect_timeout_s: Optional[float] = None,
-                 tracer=None):
+                 tracer=None, profiler=None):
         if pacing not in ("virtual", "wall"):
             raise ValueError("pacing must be 'virtual' or 'wall'")
         self.engine = lvlm._serve_engine(engine_cfg, gen, draft,
                                          compressors=compressors,
-                                         tracer=tracer)
+                                         tracer=tracer, profiler=profiler)
         # the server shares the engine's tracer (NULL_TRACER when off);
         # admission-gate spans and pump counter tracks are emitted here
         self.tracer = self.engine.tracer
+        # ... and its profiler (NULL_PROFILER when off): hot-path site
+        # histograms surface through metrics_snapshot()
+        self.profiler = self.engine.profiler
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.admission = AdmissionController(
             admission if admission is not None else AdmissionConfig(),
@@ -590,6 +593,12 @@ class AsyncLVLMServer:
         prom.counter("disconnects_total",
                      "Streams aborted by the disconnect timeout.",
                      self.disconnects, labels=labels)
+        # standalone server: render the profiler's hot-path site
+        # histograms here; in a fleet the profiler is shared, so the
+        # Router renders them ONCE at fleet level (replica label absent)
+        if replica is None and self.profiler.enabled:
+            from repro.obs.profile import profile_families
+            profile_families(prom, self.profiler)
         return prom.render()
 
     def summary(self) -> Dict:

@@ -531,6 +531,50 @@ def test_o002_kernel_emission_flagged():
     assert "trace time" in fs[0].message
 
 
+PROFILE_OK = """
+    class Engine:
+        def _decode_iteration(self):
+            if self.profiler.enabled:
+                self.profiler.site_begin("decode:greedy")
+            cost = self._launch()
+            if cost is None:
+                if self.profiler.enabled:
+                    self.profiler.site_end("decode:greedy")
+                return 0.0
+            if self.profiler.enabled:
+                self.profiler.site_end("decode:greedy", vt=cost)
+            return cost
+    """
+
+
+def test_o003_guarded_site_pairing_clean():
+    """Profiler sites close on every CFG path (per-function pairing:
+    unlike trace spans, a site never crosses function boundaries)."""
+    assert lint(PROFILE_OK, ENGINE_PATH, rules=["O003"]) == []
+
+
+def test_o003_leaky_site_flagged():
+    bad = PROFILE_OK.replace(
+        """            if cost is None:
+                if self.profiler.enabled:
+                    self.profiler.site_end("decode:greedy")
+                return 0.0""",
+        """            if cost is None:
+                return 0.0""")
+    fs = lint(bad, ENGINE_PATH, rules=["O003"])
+    assert rules_of(fs) == ["O003", "O003"]     # guard header + call site
+    assert "self/total attribution" in fs[0].message
+
+
+def test_renaming_engine_site_closes_trips_o003():
+    """Real-tree mutation: neutering every site_end in the engine leaves
+    the prefill/decode/compress sites open on every path."""
+    src = _read("src/repro/core/serving/engine.py")
+    mutant = src.replace("site_end(", "site_noop(")
+    fs = lint(mutant, ENGINE_PATH, rules=["O003"])
+    assert fs and all(f.rule == "O003" for f in fs), fs
+
+
 def test_o002_host_wrapper_emission_clean():
     ok = O002_KERNEL.replace('    tracer.instant("inner", 0)\n', '')
     assert lint(ok, KPATH, rules=["O002"]) == []
