@@ -237,6 +237,20 @@ RESOURCES = [
                        method_on("_waiters", "popleft")),
         module_pairing=True,
     ),
+    Resource(
+        rid="control_override",
+        description="controller preset override (_overrides bind records "
+                    "a deferred request's preferred fields, consumed by "
+                    "commit or restored by revert -- no request stays "
+                    "permanently downgraded after pressure clears)",
+        path_suffixes=("control/controller.py",),
+        acquire=store_subscript("_overrides", value_none=False),
+        release=method_on("_overrides", "pop"),
+        # _apply_fields acquires; the server's _admit resolution paths
+        # release via commit()/revert() -- pairing is a module property,
+        # with the specific release actions pinned per-function by R001
+        module_pairing=True,
+    ),
 ]
 
 
@@ -299,6 +313,24 @@ RELEASE_COMPLETENESS = {
         ReleaseAction("request-span close at retire (tracer.span_end)",
                       call_named("span_end")),
     ],
+    # repro.control override lifecycle: revert() must restore EVERY field
+    # the controller rewrote -- deleting any single restore leaves a
+    # request permanently degraded after pressure clears (the exact bug
+    # class ISSUE 10's R-table entry exists to make deletion-proof).
+    ("control/controller.py", "revert"): [
+        ReleaseAction("preferred-compression restore (req.compression)",
+                      store_attr("compression", value_none=None)),
+        ReleaseAction("preferred-decoder restore (req.decoder)",
+                      store_attr("decoder", value_none=None)),
+        ReleaseAction("stamped-count invalidation (nv_compressed = None)",
+                      store_attr("nv_compressed", value_none=True)),
+        ReleaseAction("override-record pop (_overrides.pop)",
+                      method_on("_overrides", "pop")),
+    ],
+    ("control/controller.py", "commit"): [
+        ReleaseAction("override-record pop (_overrides.pop)",
+                      method_on("_overrides", "pop")),
+    ],
 }
 
 
@@ -347,6 +379,9 @@ PROFILE_SCOPES = [
               "profiler sites (prefill_forward, decode launch, compress, "
               "kv transfer, prefix tier) open and close inside one "
               "method on every path"),
+    SpanScope("control/controller.py", False,
+              "the control_step site opens and closes inside "
+              "Controller.on_step on every path"),
 ]
 
 # ---------------------------------------------------------- A: async tables --

@@ -39,7 +39,7 @@ from repro.api.lvlm import LVLM, GenerationResult, ServeResult
 # re-exported internal-layer names commonly needed alongside the facade
 from repro.configs.base import CompressionConfig
 from repro.core.serving import (CostModel, EngineConfig, PoolConfig,
-                                Request, goodput, simulate_colocated,
+                                Request, SLO, goodput, simulate_colocated,
                                 simulate_disaggregated)
 
 # async serving layer (repro.serving is facade-independent; re-exported
@@ -51,6 +51,10 @@ from repro.serving import (AdmissionConfig, AsyncLVLMServer,
 # (`LVLM.serve_cluster`); same one-import convenience
 from repro.cluster import ClusterMetrics, ROUTING_POLICIES, Router
 
+# SLO-adaptive quality control + Pareto sweeps (`control=` facade knob)
+from repro.control import (AdaptivePolicy, ControlConfig, ControlLevel,
+                           Controller, DEFAULT_LADDER)
+
 __all__ = [
     "LVLM", "GenerationConfig", "GenerationResult", "ServeResult",
     "DECODERS", "DECODER_NAMES", "make_decoder",
@@ -58,9 +62,11 @@ __all__ = [
     "EarlyExitDecoder",
     "COMPRESSION_PRESETS", "resolve_compression", "CompressionConfig",
     "CompressionStrategy", "make_compressor", "compressed_token_count",
-    "EngineConfig", "Request",
+    "EngineConfig", "Request", "SLO",
     "CostModel", "PoolConfig", "goodput",
     "simulate_colocated", "simulate_disaggregated",
     "AsyncLVLMServer", "TokenStream", "AdmissionConfig", "MetricsRegistry",
     "Router", "ClusterMetrics", "ROUTING_POLICIES",
+    "Controller", "AdaptivePolicy", "ControlConfig", "ControlLevel",
+    "DEFAULT_LADDER",
 ]

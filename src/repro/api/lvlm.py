@@ -176,6 +176,27 @@ class LVLM:
             return Profiler()
         return profile
 
+    @staticmethod
+    def _resolve_control(control):
+        """``control=`` facade knob -> a ``repro.control.Controller`` or
+        None.
+
+        Mirrors ``_resolve_obs``: ``None``/``False`` -> no adaptive
+        control (ZERO policy calls -- every site guards on
+        ``control is not None``); ``True`` -> a fresh ``Controller`` with
+        the default degradation ladder; a ``ControlConfig`` or
+        ``AdaptivePolicy`` wraps into a fresh ``Controller``; a
+        ``Controller`` instance is used as-is (share one across replicas
+        so the fleet walks a single ladder)."""
+        if control is None or control is False:
+            return None
+        from repro.control import Controller
+        if control is True:
+            return Controller()
+        if isinstance(control, Controller):
+            return control
+        return Controller(control)
+
     def _requests(self, prompts, gen, visual_embeds) -> List[Request]:
         n = len(prompts)
         if visual_embeds is None:
@@ -301,7 +322,7 @@ class LVLM:
               gen: Optional[GenerationConfig] = None,
               draft: Optional["LVLM"] = None,
               compressors: Optional[Dict] = None,
-              obs=None, profile=None) -> ServeResult:
+              obs=None, profile=None, control=None) -> ServeResult:
         """Full serving run: scheduler + batching + virtual-clock metrics.
 
         ``engine_cfg`` keeps its internal-layer knobs (scheduler, batch,
@@ -333,7 +354,12 @@ class LVLM:
                                  compressors=compressors,
                                  tracer=self._resolve_obs(obs),
                                  profiler=self._resolve_profile(profile))
+        ctl = self._resolve_control(control)
         for r in requests:
+            if ctl is not None:
+                # closed-loop shaping: degrade against already-committed
+                # KV; the override commits immediately (submitted now)
+                ctl.shape_sync(eng, r)
             eng.submit(r)
         stats = dict(eng.run(), **eng.decoder_stats())
         stats["decode_cost_by_group"] = dict(eng.group_costs)
@@ -349,7 +375,8 @@ class LVLM:
                     admission=None, metrics=None, compressors=None,
                     pacing: str = "virtual", pacing_scale: float = 1.0,
                     disconnect_timeout_s: Optional[float] = None,
-                    obs=None, profile=None) -> AsyncLVLMServer:
+                    obs=None, profile=None,
+                    control=None) -> AsyncLVLMServer:
         """Async streaming server over the same engine wiring as ``serve``.
 
         Returns a ``repro.serving.AsyncLVLMServer``: a background pump over
@@ -379,7 +406,8 @@ class LVLM:
                                pacing=pacing, pacing_scale=pacing_scale,
                                disconnect_timeout_s=disconnect_timeout_s,
                                tracer=self._resolve_obs(obs),
-                               profiler=self._resolve_profile(profile))
+                               profiler=self._resolve_profile(profile),
+                               control=self._resolve_control(control))
 
     def serve_cluster(self, replicas=2,
                       engine_cfg: Optional[EngineConfig] = None,
@@ -391,7 +419,7 @@ class LVLM:
                       pacing: str = "virtual",
                       pacing_scale: float = 1.0,
                       disconnect_timeout_s: Optional[float] = None,
-                      obs=None, profile=None) -> "Router":
+                      obs=None, profile=None, control=None) -> "Router":
         """Multi-engine router: N async server replicas behind ONE submit
         surface (``repro.cluster.Router``), with pluggable routing.
 
@@ -442,6 +470,9 @@ class LVLM:
         # histograms, rendered once in Router.metrics_snapshot()
         tracer = self._resolve_obs(obs)
         profiler = self._resolve_profile(profile)
+        # ... and ONE adaptive controller: per-replica pressure levels,
+        # fleet-shared actuation counters, router-level routing bias
+        ctl = self._resolve_control(control)
         servers = []
         for i, spec in enumerate(specs):
             unknown = set(spec) - {"engine_cfg", "gen", "draft", "admission",
@@ -458,6 +489,6 @@ class LVLM:
                 compressors=spec.get("compressors", compressors),
                 pacing=pacing, pacing_scale=pacing_scale,
                 disconnect_timeout_s=disconnect_timeout_s,
-                obs=tracer, profile=profiler))
+                obs=tracer, profile=profiler, control=ctl))
         return Router(servers, routing=routing, roles=rep_roles,
-                      shared_prefix=shared_prefix)
+                      shared_prefix=shared_prefix, control=ctl)

@@ -107,4 +107,6 @@ class ClusterMetrics:
         if self.router.migrations or any(rep.role != "unified"
                                          for rep in reps):
             out["disaggregation"] = self.disaggregation()
+        if self.router.control is not None:
+            out.update(self.router.control.summary())
         return out

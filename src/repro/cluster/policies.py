@@ -80,6 +80,26 @@ class PrefixAffinityPolicy:
         return candidates[h % len(candidates)]
 
 
+def replica_keep_fraction(rep, probe: int = 256) -> float:
+    """Fraction of visual tokens the replica's DEFAULT compression
+    strategy keeps, probed exactly via
+    ``CompressionStrategy.compressed_token_count`` (the same accounting
+    admission uses -- no heuristics)."""
+    comp = rep.server.engine.compressor
+    if comp is None or probe <= 0:
+        return 1.0
+    return comp.compressed_token_count(probe) / float(probe)
+
+
+def prefer_aggressive(candidates: Sequence, max_keep: float = 0.5) -> List:
+    """Candidates whose default strategy keeps at most ``max_keep`` of
+    visual tokens -- the SLO-adaptive controller's routing bias for
+    video-heavy traffic under pressure. Empty when none qualify (the
+    caller falls back to the full list)."""
+    return [rep for rep in candidates
+            if replica_keep_fraction(rep) <= max_keep]
+
+
 ROUTING_POLICIES = {
     "round_robin": RoundRobinPolicy,
     "least_kv": LeastKVPolicy,

@@ -284,7 +284,8 @@ class Router:
     def __init__(self, servers: Sequence[AsyncLVLMServer],
                  routing="round_robin",
                  roles: Optional[Sequence[str]] = None,
-                 shared_prefix: Optional[bool] = None):
+                 shared_prefix: Optional[bool] = None,
+                 control=None):
         if not servers:
             raise ValueError("Router needs at least one replica")
         if roles is None:
@@ -304,6 +305,11 @@ class Router:
                              "('decode' or 'unified') sibling to hand "
                              "KV to")
         self.policy = make_policy(routing)
+        # fleet-shared adaptive controller (repro.control.Controller or
+        # None): biases video-heavy dispatch toward aggressive-pruning
+        # replicas while any replica is under pressure. None = zero
+        # policy calls, like the null tracer.
+        self.control = control
         self.metrics = ClusterMetrics(self)
         self._streams: Dict[int, RouterStream] = {}
         self._parked: List[RouterStream] = []       # FIFO dispatch order
@@ -431,7 +437,14 @@ class Router:
             stream._park_evt.set()
 
     def _dispatch(self, stream: RouterStream) -> None:
-        rep = self.policy.pick(stream.request, self._candidates("prefill"))
+        candidates = self._candidates("prefill")
+        if self.control is not None:
+            # under pressure, video-heavy requests prefer replicas whose
+            # default compression is aggressive (no-op at level 0; falls
+            # back to the full list when no candidate qualifies)
+            candidates = self.control.route_bias(stream.request,
+                                                 candidates)
+        rep = self.policy.pick(stream.request, candidates)
         rep.dispatched += 1
         rep.inflight[stream.request.rid] = stream.request
         stream.replica = rep
@@ -563,6 +576,10 @@ class Router:
         if profiler is not None and profiler.enabled:
             from repro.obs.profile import profile_families
             profile_families(prom, profiler)
+        # ... and ONE adaptive controller: its repro_control_* families
+        # (per-replica ladder level, actuation counters) render here too
+        if self.control is not None:
+            self.control.prom_families(prom)
         return "".join(parts) + prom.render()
 
 

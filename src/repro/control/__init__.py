@@ -1,0 +1,34 @@
+"""``repro.control``: SLO-adaptive quality control + Pareto sweeps.
+
+Two halves of one loop (ROADMAP's "EffiVLM-BENCH-style Pareto sweep
+harness + SLO-adaptive quality control" item):
+
+  * OFFLINE -- ``repro.control.sweep`` measures the quality-vs-latency
+    frontier over (compression x decoder x replica mix x arrival rate)
+    and commits it as ``BENCH_pareto.json`` (CI regress-gated);
+  * ONLINE -- ``AdaptivePolicy`` (the table-driven degradation ladder,
+    ``repro.control.policy``) + ``Controller`` (the actuator threaded
+    through server admission and router dispatch,
+    ``repro.control.controller``) walk that frontier live: under
+    KV/SLO pressure requests degrade to aggressive presets instead of
+    deferring, and recover when pressure drops.
+
+Enable with ``control=True`` (defaults), a ``ControlConfig``, an
+``AdaptivePolicy``, or a prebuilt ``Controller`` on ``LVLM.serve`` /
+``serve_async`` / ``serve_cluster``. ``control=None`` (the default)
+makes ZERO policy calls.
+"""
+from repro.control.controller import Controller
+from repro.control.policy import (AdaptivePolicy, ControlConfig,
+                                  ControlLevel, DEFAULT_LADDER,
+                                  LevelState)
+from repro.control.sweep import (FRONTIER_AXES, SweepConfig, dominates,
+                                 pareto_frontier, point_key, run_sweep,
+                                 write_pareto)
+
+__all__ = [
+    "AdaptivePolicy", "ControlConfig", "ControlLevel", "Controller",
+    "DEFAULT_LADDER", "LevelState",
+    "FRONTIER_AXES", "SweepConfig", "dominates", "pareto_frontier",
+    "point_key", "run_sweep", "write_pareto",
+]

@@ -145,6 +145,11 @@ def main() -> int:
                     help="write a Prometheus text-format metrics snapshot "
                          "after the run ('-' = stdout); requires the async "
                          "path (--open-loop or --replicas > 1)")
+    ap.add_argument("--control", action="store_true",
+                    help="enable the SLO-adaptive quality controller "
+                         "(repro.control): under KV pressure, degrade "
+                         "deferred requests to aggressive compression "
+                         "presets instead of queueing them")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower/compile decode_32k under the production mesh")
     args = ap.parse_args()
@@ -202,12 +207,12 @@ def main() -> int:
             roles=roles, admission=adm, pacing=args.pacing,
             pacing_scale=args.pacing_scale,
             disconnect_timeout_s=args.disconnect_timeout,
-            obs=tracer) \
+            obs=tracer, control=args.control) \
             if args.replicas > 1 else lvlm.serve_async(
                 ec, gen=gen, admission=adm, pacing=args.pacing,
                 pacing_scale=args.pacing_scale,
                 disconnect_timeout_s=args.disconnect_timeout,
-                obs=tracer)
+                obs=tracer, control=args.control)
 
         async def drive():
             async with front:
@@ -227,7 +232,8 @@ def main() -> int:
         if args.metrics_out:
             ap.error("--metrics-out requires the async path "
                      "(--open-loop or --replicas > 1)")
-        stats = lvlm.serve(reqs, engine_cfg=ec, gen=gen, obs=tracer).stats
+        stats = lvlm.serve(reqs, engine_cfg=ec, gen=gen, obs=tracer,
+                           control=args.control).stats
     if tracer is not None:
         if args.trace_out:
             from repro.obs import write_chrome_trace

@@ -39,16 +39,27 @@ from typing import Dict, List, Tuple
 _HIGHER_WORSE = ("us_per_call", "_us", "_s.", "time_s", "ttft", "tpot",
                  "seconds", "wall", "queue_wait", "jct")
 _HIGHER_BETTER = ("throughput", "tok_per_s", "goodput", "attainment",
-                  "hit_rate")
+                  "hit_rate", "quality_proxy")
 # leaf names that are never gated even under a matching path (noise or
-# bookkeeping, not performance)
-_UNGATED_LEAVES = ("std", "count", "iters", "schema_version", "share")
+# bookkeeping, not performance). rate_rps/retained_visual_ratio are a
+# pareto row's identity/configuration, not measurements; acceptance is
+# folded into quality_proxy.
+_UNGATED_LEAVES = ("std", "count", "iters", "schema_version", "share",
+                   "rate_rps", "retained_visual_ratio", "acceptance",
+                   "replicas")
 
 _ID_FIELDS = ("kernel", "scenario", "name", "site", "stage")
+
+# composite identity of a BENCH_pareto.json sweep row: one grid point is
+# (compression preset x decoder x replica mix x arrival rate), so a row
+# keyed this way matches its baseline row regardless of sweep order
+_PARETO_ID_FIELDS = ("compression", "decoder", "mix", "rate_rps")
 
 
 def _item_key(item, i: int) -> str:
     if isinstance(item, dict):
+        if all(f in item for f in _PARETO_ID_FIELDS):
+            return "|".join(str(item[f]) for f in _PARETO_ID_FIELDS)
         for f in _ID_FIELDS:
             if f in item and isinstance(item[f], str):
                 key = item[f]

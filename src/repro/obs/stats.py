@@ -65,4 +65,18 @@ def summarize_records(records: Iterable) -> Dict:
         sum(r.tpot_ok for r in done) / n if n else None)
     out["slo_goodput"] = (
         sum(r.ttft_ok and r.tpot_ok for r in done) / n if n else None)
+    # END-TO-END TTFT (admission queue wait + engine TTFT) against the
+    # same SLO: the user-perceived attainment that defer-only admission
+    # hides in queue_wait. Duck-typed fallback: records without the e2e
+    # fields (older producers) fall back to the engine-phase verdict.
+    e2es = [r.e2e_ttft for r in done
+            if getattr(r, "e2e_ttft", None) is not None]
+    if e2es:
+        out.update(percentile_summary(e2es, "e2e_ttft"))
+    out["slo_e2e_attainment"] = (
+        sum(getattr(r, "e2e_ok", r.ttft_ok) for r in done) / n
+        if n else None)
+    out["slo_e2e_goodput"] = (
+        sum(getattr(r, "e2e_ok", r.ttft_ok) and r.tpot_ok
+            for r in done) / n if n else None)
     return out

@@ -102,6 +102,30 @@ class AdmissionController:
     def queue_depth(self) -> int:
         return len(self._waiters)
 
+    @property
+    def draining(self) -> bool:
+        """Hysteresis state: True while admits are held until committed
+        usage falls back to the low watermark (exported as the
+        ``repro_admission_draining`` gauge; a controller pressure
+        signal)."""
+        return self._draining
+
+    def refresh(self, req) -> bool:
+        """Recompute a DEFERRED waiter's stored KV need after something
+        rewrote the request's shape (the adaptive controller swapping
+        ``req.compression`` to an aggressive preset). Without this the
+        queue would keep gating on the pre-rewrite token count and a
+        shrunken request could wait on KV it no longer needs. Returns
+        True if ``req`` was found in the queue."""
+        for i, entry in enumerate(self._waiters):
+            if entry[1] is req:
+                fut, r, _stale, submit = entry
+                self._waiters[i] = (fut, r,
+                                    self.engine.kv_request_tokens(r),
+                                    submit)
+                return True
+        return False
+
     # ------------------------------------------------------------- gate --
     async def admit(self, req, submit: Optional[Callable] = None) -> bool:
         """Commit ``req`` into the engine, awaiting under backpressure.

@@ -36,6 +36,14 @@ class RequestRecord:
     aborted: bool
     ttft_ok: bool                     # against the request's OWN SLO
     tpot_ok: bool
+    # END-TO-END first-token latency: admission-gate queue wait + TTFT.
+    # ``Engine.submit`` re-anchors ``arrival`` at the commit clock, so
+    # plain ``ttft`` is the ENGINE-phase latency only -- a deferred
+    # request's gate wait is invisible to it. e2e_ok judges the TTFT SLO
+    # a user actually experiences (what graceful degradation improves
+    # over defer-only admission).
+    e2e_ttft: Optional[float] = None
+    e2e_ok: bool = False
 
 
 class MetricsRegistry:
@@ -69,7 +77,12 @@ class MetricsRegistry:
             ttft_ok=(not aborted and req.ttft() is not None
                      and req.ttft() <= req.slo.ttft_ms * 1e-3),
             tpot_ok=(not aborted
-                     and (req.tpot() or 0.0) <= req.slo.tpot_ms * 1e-3))
+                     and (req.tpot() or 0.0) <= req.slo.tpot_ms * 1e-3),
+            e2e_ttft=(None if req.ttft() is None
+                      else queue_wait + req.ttft()),
+            e2e_ok=(not aborted and req.ttft() is not None
+                    and queue_wait + req.ttft()
+                    <= req.slo.ttft_ms * 1e-3))
         self.records.append(rec)
         self._expected_ttft = None        # new record invalidates the cache
         return rec

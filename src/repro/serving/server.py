@@ -146,7 +146,7 @@ class AsyncLVLMServer:
                  compressors: Optional[Dict] = None,
                  pacing: str = "virtual", pacing_scale: float = 1.0,
                  disconnect_timeout_s: Optional[float] = None,
-                 tracer=None, profiler=None):
+                 tracer=None, profiler=None, control=None):
         if pacing not in ("virtual", "wall"):
             raise ValueError("pacing must be 'virtual' or 'wall'")
         self.engine = lvlm._serve_engine(engine_cfg, gen, draft,
@@ -177,6 +177,13 @@ class AsyncLVLMServer:
         self._pump_task: Optional[asyncio.Task] = None
         self._stopping = False
         self._pump_error: Optional[BaseException] = None
+        # SLO-adaptive controller (repro.control), possibly shared
+        # fleet-wide like the tracer/profiler. None = zero policy calls:
+        # every call site below guards on `is not None`, same discipline
+        # as tracer.enabled (locked by a patch-to-raise test).
+        self.control = control
+        if control is not None:
+            control.attach(self)
         # runtime sanitizer (repro.analysis.sanitizer): follows the
         # engine's resolved flag (EngineConfig.sanitize / REPRO_SANITIZE)
         self.sanitize = bool(getattr(self.engine, "sanitize", False))
@@ -257,10 +264,16 @@ class AsyncLVLMServer:
         if self.tracer.enabled:
             self.tracer.span_begin("admission_wait", rid, replica=rep,
                                    vt=self.engine.clock)
+        if self.control is not None:
+            # under pressure: degrade the incoming request's shape BEFORE
+            # the watermark check (aggressive preset = smaller KV need)
+            self.control.shape(self, stream.request)
         try:
             admitted = await self.admission.admit(stream.request)
         except asyncio.CancelledError:
             self._streams.pop(stream.request.rid, None)
+            if self.control is not None:
+                self.control.revert(stream.request)
             stream.aborted = True
             stream._finished = True
             if self.tracer.enabled:
@@ -269,10 +282,16 @@ class AsyncLVLMServer:
                                        reason="cancelled at admission")
             raise
         if not admitted:
+            if self.control is not None:
+                self.control.revert(stream.request)
             if self.tracer.enabled:
                 self.tracer.span_end("admission_wait", rid, replica=rep,
                                      vt=self.engine.clock, cancelled=True)
             return                      # cancelled at the admission gate
+        if self.control is not None:
+            # the request entered the engine under its (possibly
+            # degraded) fields: consume the override record
+            self.control.commit(stream.request)
         stream.admit_clock = self.engine.clock
         if self.tracer.enabled:
             self.tracer.span_end("admission_wait", rid, replica=rep,
@@ -447,6 +466,10 @@ class AsyncLVLMServer:
                 self._drain()
                 self._check_disconnects()
                 self.admission.maybe_admit()
+                if self.control is not None:
+                    # observe pressure, walk the degradation ladder,
+                    # reshape deferred waiters on a level change
+                    self.control.on_step(self)
                 if progressed and self.tracer.enabled:
                     self._emit_counters()
                 if self.sanitize:
@@ -590,6 +613,10 @@ class AsyncLVLMServer:
         prom.gauge("admission_queue_depth",
                    "Requests parked at the admission gate.",
                    len(self.admission._waiters), labels=labels)
+        prom.gauge("admission_draining",
+                   "1 while the admission gate holds admits until "
+                   "committed KV falls to the low watermark.",
+                   int(self.admission.draining), labels=labels)
         prom.counter("disconnects_total",
                      "Streams aborted by the disconnect timeout.",
                      self.disconnects, labels=labels)
@@ -599,6 +626,9 @@ class AsyncLVLMServer:
         if replica is None and self.profiler.enabled:
             from repro.obs.profile import profile_families
             profile_families(prom, self.profiler)
+        # same sharing rule for the adaptive controller's families
+        if replica is None and self.control is not None:
+            self.control.prom_families(prom)
         return prom.render()
 
     def summary(self) -> Dict:
@@ -615,4 +645,6 @@ class AsyncLVLMServer:
         for name, cs in self.engine.compression_stats().items():
             for k, v in cs.items():
                 out[f"compression/{name}/{k}"] = v
+        if self.control is not None:
+            out.update(self.control.summary())
         return out

@@ -244,6 +244,57 @@ def test_deleting_migration_source_release_trips_r001(needle, action):
                and action in f.message for f in fs), fs
 
 
+CONTROLLER_PATH = "src/repro/control/controller.py"
+
+
+def test_real_controller_is_clean_under_r_rules():
+    src = _read(CONTROLLER_PATH)
+    assert lint(src, CONTROLLER_PATH, rules=["R"]) == []
+
+
+@pytest.mark.parametrize("needle,action", [
+    ("req.compression = orig_comp", "preferred-compression restore"),
+    ("req.decoder = orig_dec", "preferred-decoder restore"),
+])
+def test_deleting_controller_revert_restore_trips_r001(needle, action):
+    """The controller's revert() is R001-pinned like _release_request:
+    deleting any single field restore leaves a request permanently
+    degraded after pressure clears, and must flip the analyzer."""
+    src = _read(CONTROLLER_PATH)
+    mutant = _neutralize(src, needle)
+    fs = lint(mutant, CONTROLLER_PATH, rules=["R001"])
+    assert any(f.rule == "R001" and "revert" in f.message
+               and action in f.message for f in fs), fs
+
+
+def test_deleting_controller_nv_invalidation_trips_r001():
+    # "req.nv_compressed = None" appears in _apply_fields AND revert;
+    # only revert's copy is R001-pinned, so neutralize both (first call
+    # hits _apply_fields, second hits revert)
+    src = _read(CONTROLLER_PATH)
+    mutant = _neutralize(src, "req.nv_compressed = None")
+    mutant = _neutralize(mutant, "req.nv_compressed = None")
+    fs = lint(mutant, CONTROLLER_PATH, rules=["R001"])
+    assert any(f.rule == "R001" and "revert" in f.message
+               and "stamped-count invalidation" in f.message
+               for f in fs), fs
+
+
+def test_deleting_controller_override_pops_trips_r001_and_r003():
+    # the pop line is identical in commit() and revert(); removing both
+    # must trip R001 for each release function AND R003 (the module no
+    # longer releases the control_override resource at all)
+    src = _read(CONTROLLER_PATH)
+    mutant = _neutralize(src, "self._overrides.pop(req.rid, None)")
+    mutant = _neutralize(mutant, "self._overrides.pop(req.rid, None)")
+    fs = lint(mutant, CONTROLLER_PATH, rules=["R001", "R003"])
+    r001_funcs = {f.message for f in fs if f.rule == "R001"}
+    assert any("commit" in m for m in r001_funcs), fs
+    assert any("revert" in m for m in r001_funcs), fs
+    assert any(f.rule == "R003" and "control_override" in f.message
+               for f in fs), fs
+
+
 def test_deleting_slot_handoff_trips_r002():
     src = _read("src/repro/core/serving/engine.py")
     mutant = _neutralize(src, "self.slot_req[slot] = req")

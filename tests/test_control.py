@@ -1,0 +1,544 @@
+"""repro.control (PR tentpole): the SLO-adaptive quality controller and
+the Pareto sweep harness.
+
+Contracts locked down here:
+
+  * ZERO policy calls when off: ``control=None`` (the default) performs
+    no controller/policy calls on any serving path -- every Controller
+    and AdaptivePolicy method is patched to raise, and full sync/async/
+    cluster runs must not trip one (the NULL_TRACER/NULL_PROFILER
+    discipline's third sibling);
+  * an ATTACHED but unpressured controller changes nothing: identical
+    tokens at temperature 0 versus the control=None run;
+  * no-thrash (hypothesis property): for ANY pressure trace, two level
+    changes are never closer than ``cooldown_s`` on the clock, and each
+    change moves exactly one rung;
+  * no-deadlock (hypothesis property): the controller shrinking a
+    deferred waiter's KV need mid-queue (``refresh`` + ``maybe_admit``
+    re-entry) never strands a waiter -- every admit future resolves;
+  * full recovery: overrides applied to deferred requests under
+    pressure are REVERTED when pressure clears (fields restored
+    exactly, ``control_overrides_open`` back to 0) and engine knobs
+    (speculative gamma, early-exit threshold) return to preferred;
+  * graceful degradation beats defer-only: on the bench's KV-tight
+    video burst, controller-on strictly improves end-to-end SLO
+    attainment at the same arrival rate;
+  * observability: ``repro_control_*`` + ``repro_admission_draining``
+    families in ``metrics_snapshot()``, ``control_*`` keys in
+    ``summary()``;
+  * the sweep harness: non-dominated frontier math on hand-built
+    points, and the committed ``BENCH_pareto.json`` (>= 8 points,
+    schema v1, frontier consistent, self-compare clean under
+    ``repro.obs.regress`` with the composite preset|decoder|mix|rate
+    row identity).
+"""
+import asyncio
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.obs.regress as regress
+from _hypothesis_compat import given, settings, st
+from repro.api import (AdaptivePolicy, AdmissionConfig, ControlConfig,
+                       Controller, EngineConfig, GenerationConfig, LVLM,
+                       Request, SLO)
+from repro.control import (DEFAULT_LADDER, LevelState, SweepConfig,
+                           dominates, pareto_frontier, point_key)
+from repro.control.controller import _ACTUATION_KINDS
+from repro.obs import NULL_PROFILER, NULL_TRACER
+from repro.serving.admission import AdmissionController
+
+MAX_NEW = 6
+GEN = GenerationConfig(decoder="greedy", temperature=0.0,
+                       max_new_tokens=MAX_NEW)
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    return LVLM.from_pretrained("qwen2-vl-2b", smoke=True)
+
+
+def _ec(**kw):
+    base = dict(max_batch=4, cache_len=128, temperature=0.0, sanitize=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _reqs(cfg, n, seed=0, lo=8, hi=16, new=MAX_NEW, visual=True):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        toks = list(rng.randint(1, cfg.vocab_size,
+                                size=rng.randint(lo, hi)))
+        ve = None
+        if visual:
+            ve = rng.randn(cfg.num_visual_tokens, cfg.d_model).astype(
+                np.float32) * 0.02
+        reqs.append(Request(rid=i, tokens=toks, max_new_tokens=new,
+                            visual_embeds=ve))
+    return reqs
+
+
+async def _consume(stream):
+    return [tok async for tok in stream]
+
+
+def _drive_all(front, reqs):
+    async def drive():
+        async with front:
+            return await asyncio.gather(
+                *(_consume(front.submit(r)) for r in reqs))
+
+    outs = asyncio.run(drive())
+    return {r.rid: list(o) for r, o in zip(reqs, outs)}
+
+
+# ----------------------------------------------- zero policy calls off --
+
+
+def test_control_off_makes_zero_policy_calls(vlm, monkeypatch):
+    """control=None must perform NO controller/policy work anywhere on
+    the sync, async, or cluster path -- every call site is guarded by
+    ``if control is not None``. Patching every Controller and
+    AdaptivePolicy method to raise turns one stray call into a failure
+    (and, since the guarded path runs no policy code at all, locks the
+    bit-identical-when-off guarantee structurally)."""
+    def boom(*a, **k):
+        raise AssertionError("controller/policy call on the control=None "
+                             "path")
+
+    for name in ("attach", "on_step", "shape", "shape_sync", "commit",
+                 "revert", "route_bias", "summary", "prom_families"):
+        monkeypatch.setattr(Controller, name, boom)
+    for name in ("pressure", "update", "overrides_for"):
+        monkeypatch.setattr(AdaptivePolicy, name, boom)
+    res = vlm.serve(_reqs(vlm.cfg, 3, seed=1), engine_cfg=_ec(), gen=GEN)
+    assert res.stats["finished"] == 3
+    got = _drive_all(vlm.serve_async(_ec(), gen=GEN),
+                     _reqs(vlm.cfg, 3, seed=2))
+    assert all(len(o) == MAX_NEW for o in got.values())
+    router = vlm.serve_cluster(2, _ec(), gen=GEN)
+    got = _drive_all(router, _reqs(vlm.cfg, 4, seed=3))
+    assert all(len(o) == MAX_NEW for o in got.values())
+
+
+def test_unpressured_controller_is_bit_identical_at_temp0(vlm):
+    """An attached controller under NO pressure never leaves rung 0, so
+    tokens match the control=None run bit-for-bit (sanitizer on)."""
+    reqs = lambda: _reqs(vlm.cfg, 4, seed=5)          # noqa: E731
+    ref = _drive_all(vlm.serve_async(_ec(), gen=GEN), reqs())
+    ctl = Controller()
+    got = _drive_all(vlm.serve_async(_ec(), gen=GEN, control=ctl), reqs())
+    assert got == ref
+    assert ctl.fleet_level == 0
+    assert ctl.summary()["control_overrides_open"] == 0
+    assert sum(ctl.actuations.values()) == 0
+
+
+# ----------------------------------------------- no-thrash (property) --
+
+
+@settings(max_examples=40)
+@given(st.lists(st.floats(min_value=0.0, max_value=2.0),
+                min_size=2, max_size=60),
+       st.floats(min_value=0.001, max_value=0.1))
+def test_no_level_oscillation_within_cooldown(pressures, cooldown):
+    """For ANY adversarial pressure trace: consecutive level changes are
+    separated by >= cooldown_s on the clock, every change moves exactly
+    one rung, and the level stays inside the ladder."""
+    policy = AdaptivePolicy(ControlConfig(cooldown_s=cooldown))
+    state = LevelState()
+    clock, last_change_at = 0.0, None
+    prev = 0
+    for p in pressures:
+        clock += cooldown / 3.0          # 3 observations per cooldown
+        level = policy.update(state, p, clock)
+        assert 0 <= level < len(DEFAULT_LADDER)
+        assert abs(level - prev) <= 1
+        if level != prev:
+            if last_change_at is not None:
+                assert clock - last_change_at >= cooldown - 1e-12
+            last_change_at = clock
+        prev = level
+
+
+def test_hysteresis_band_is_inert():
+    """Pressure strictly inside (low, high) never changes the level."""
+    policy = AdaptivePolicy(ControlConfig(cooldown_s=0.0))
+    state = LevelState()
+    for i in range(20):
+        assert policy.update(state, 0.7, float(i)) == 0
+    policy.update(state, 0.9, 100.0)
+    assert state.level == 1
+    for i in range(20):
+        assert policy.update(state, 0.7, 200.0 + i) == 1
+
+
+# ------------------------------------------- no-deadlock (property) --
+
+
+class _FakeEngine:
+    """Duck-typed engine for AdmissionController: KV accounting only.
+    ``kv_request_tokens`` reads the request's LIVE ``need`` attribute,
+    so a controller-style rewrite (shrink need + ``refresh``) behaves
+    exactly like swapping ``req.compression`` does on the real engine."""
+
+    def __init__(self, capacity):
+        self.kv_capacity_tokens = capacity
+        self.waiting, self.running = [], []
+        self.clock = 0.0
+
+    def kv_committed_tokens(self):
+        return sum(r.need for r in self.running)
+
+    def kv_request_tokens(self, req):
+        return req.need
+
+    def submit(self, req):
+        self.running.append(req)
+
+    def retire(self, req):
+        self.running.remove(req)
+
+
+class _FakeReq:
+    def __init__(self, rid, need):
+        self.rid, self.need = rid, need
+        self.compression, self.decoder = None, None
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=64, max_value=256),
+       st.lists(st.integers(min_value=8, max_value=200),
+                min_size=1, max_size=12),
+       st.integers(min_value=2, max_value=8))
+def test_shrinking_deferred_need_never_deadlocks(capacity, needs, shrink):
+    """The controller shrinking a deferred waiter's KV need mid-queue
+    (refresh + maybe_admit re-entry) plus normal retirement drain must
+    resolve EVERY admit future -- no waiter is stranded by the
+    hysteresis flag or a stale stored need."""
+    async def run():
+        eng = _FakeEngine(capacity)
+        adm = AdmissionController(
+            AdmissionConfig(high_watermark=0.9, low_watermark=0.7), eng)
+        reqs = [_FakeReq(i, min(n, capacity)) for i, n in enumerate(needs)]
+        tasks = [asyncio.ensure_future(adm.admit(r)) for r in reqs]
+        for _ in range(4):
+            await asyncio.sleep(0)
+        for step in range(10 * len(reqs) + 10):
+            if all(t.done() for t in tasks):
+                break
+            # controller actuation: shrink every deferred need, refresh
+            # the stored entry, re-enter the drain
+            for entry in list(adm._waiters):
+                req = entry[1]
+                req.need = max(1, req.need // shrink)
+                assert adm.refresh(req)
+            adm.maybe_admit()
+            # pump progress: retire one running request per iteration
+            if eng.running:
+                eng.retire(eng.running[0])
+            adm.maybe_admit()
+            await asyncio.sleep(0)
+        assert all(t.done() for t in tasks), "admission deadlocked"
+        assert all(t.result() is True for t in tasks)
+
+    asyncio.run(run())
+
+
+# --------------------------------------------------- override lifecycle --
+
+
+class _FakeSpecDecoder:
+    def __init__(self):
+        self.gamma = 4
+
+
+class _FakeExitDecoder:
+    def __init__(self):
+        self.threshold = 0.8
+
+
+class _KnobEngine(_FakeEngine):
+    def __init__(self, capacity):
+        super().__init__(capacity)
+        self.trace_replica = 0
+        self._default_name = "greedy"
+        self._decoders = {"speculative": _FakeSpecDecoder(),
+                          "early_exit": _FakeExitDecoder()}
+        self.committed = 0
+
+    def kv_committed_tokens(self):
+        return self.committed
+
+    def kv_request_tokens(self, req):
+        need = req.need
+        if req.compression == "fastv-0.5":
+            need //= 2
+        elif req.compression == "fastv-0.25":
+            need //= 4
+        return max(1, need)
+
+
+class _FakeServer:
+    def __init__(self, capacity=1000):
+        self.engine = _KnobEngine(capacity)
+        # low_watermark=0.3: queued waiters survive the downshift phase
+        # (pressure can clear without the gate draining them first)
+        self.admission = AdmissionController(
+            AdmissionConfig(high_watermark=0.9, low_watermark=0.3),
+            self.engine)
+        self.tracer = NULL_TRACER
+        self.profiler = NULL_PROFILER
+
+
+def test_pressure_cycle_reverts_deferred_overrides_exactly():
+    """Full degradation + recovery on deferred waiters: rising pressure
+    rewrites their compression/decoder and scales the engine knobs;
+    pressure clearing restores EVERY field and knob to preferred and
+    closes every override record."""
+    async def run():
+        srv = _FakeServer()
+        eng = srv.engine
+        ctl = Controller(ControlConfig(cooldown_s=0.0))
+        ctl.attach(srv)
+        reqs = [_FakeReq(0, 64), _FakeReq(1, 64)]
+        reqs[1].decoder = "speculative"
+        loop = asyncio.get_running_loop()
+        for r in reqs:
+            srv.admission._waiters.append(
+                (loop.create_future(), r, eng.kv_request_tokens(r),
+                 eng.submit))
+
+        eng.committed = 900                     # pressure 0.9 >= high
+        ctl.on_step(srv)
+        assert ctl.level(srv) == 1
+        assert all(r.compression == "fastv-0.5" for r in reqs)
+        assert eng._decoders["speculative"].gamma == 2
+        ctl.on_step(srv)
+        assert ctl.level(srv) == 2
+        assert all(r.compression == "fastv-0.25" for r in reqs)
+        assert reqs[1].decoder == "greedy"      # speculative -> greedy
+        assert eng._decoders["speculative"].gamma == 1
+        assert eng._decoders["early_exit"].threshold \
+            == pytest.approx(0.8 * 0.8)
+        assert ctl.summary()["control_overrides_open"] == 2
+
+        eng.committed = 400                     # pressure 0.4 <= low
+        ctl.on_step(srv)                        # 2 -> 1
+        assert all(r.compression == "fastv-0.5" for r in reqs)
+        ctl.on_step(srv)                        # 1 -> 0: full revert
+        assert ctl.level(srv) == 0
+        assert reqs[0].compression is None and reqs[0].decoder is None
+        assert reqs[1].compression is None
+        assert reqs[1].decoder == "speculative"
+        assert eng._decoders["speculative"].gamma == 4
+        assert eng._decoders["early_exit"].threshold == pytest.approx(0.8)
+        s = ctl.summary()
+        assert s["control_overrides_open"] == 0
+        assert s["control_reverts"] >= 2
+        for fut, *_ in srv.admission._waiters:
+            fut.cancel()
+
+    asyncio.run(run())
+
+
+def test_commit_consumes_override_and_revert_is_then_a_noop():
+    srv = _FakeServer()
+    ctl = Controller(ControlConfig(cooldown_s=0.0))
+    ctl.attach(srv)
+    st_ = ctl._state[id(srv)]
+    st_.level = 1
+    req = _FakeReq(7, 32)
+    assert ctl.shape(srv, req)
+    assert req.compression == "fastv-0.5"
+    assert ctl.commit(req)
+    assert ctl.summary()["control_overrides_open"] == 0
+    # committed = consumed: a later revert must NOT restore anything
+    assert not ctl.revert(req)
+    assert req.compression == "fastv-0.5"
+
+
+def test_route_bias_prefers_aggressive_replicas_under_pressure(vlm):
+    """While any replica is degraded, video-heavy requests are narrowed
+    to replicas whose DEFAULT compression keeps <= route_keep_max of
+    visual tokens; text-only requests and rung 0 are untouched."""
+    class _Rep:
+        def __init__(self, server):
+            self.server = server
+
+    ctl = Controller(ControlConfig(cooldown_s=0.0))
+    plain = _Rep(vlm.serve_async(_ec(), gen=GEN))
+    aggressive = _Rep(vlm.serve_async(
+        _ec(), gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                    max_new_tokens=MAX_NEW,
+                                    compression="fastv-0.25")))
+    ctl.attach(plain.server)
+    video = _reqs(vlm.cfg, 1, seed=9)[0]
+    text = _reqs(vlm.cfg, 1, seed=9, visual=False)[0]
+    cands = [plain, aggressive]
+    assert ctl.route_bias(video, cands) == cands      # rung 0: no bias
+    ctl._state[id(plain.server)].level = 1
+    assert ctl.route_bias(video, cands) == [aggressive]
+    assert ctl.route_bias(text, cands) == cands       # text untouched
+    assert ctl.actuations["route"] == 1
+
+
+# ------------------------------------------------- burst acceptance --
+
+
+def test_adaptive_control_beats_defer_only_on_kv_tight_burst(vlm):
+    """The PR's acceptance criterion, at test scale: same video-heavy
+    Poisson burst into the same KV-tight server; the controller's
+    graceful degradation must strictly beat defer-only admission on
+    end-to-end SLO attainment, finish every request, and leave no
+    override open (sanitizer on throughout)."""
+    def workload():
+        rng = np.random.RandomState(77)
+        reqs = _reqs(vlm.cfg, 16, seed=78, lo=8, hi=14, new=8,
+                     visual=False)
+        arrivals = np.cumsum(rng.exponential(1 / 4000.0, size=len(reqs)))
+        for i, r in enumerate(reqs):
+            r.arrival = float(arrivals[i])
+            r.slo = SLO(ttft_ms=30.0, tpot_ms=6.0)
+            r.visual_embeds = rng.randn(
+                160, vlm.cfg.d_model).astype(np.float32) * 0.02
+        return reqs
+
+    summaries = {}
+    for label, ctl in (("off", None),
+                       ("on", ControlConfig(cooldown_s=0.001))):
+        server = vlm.serve_async(
+            _ec(max_batch=8, cache_len=256, kv_capacity_tokens=512),
+            gen=GenerationConfig(decoder="greedy", temperature=0.0,
+                                 max_new_tokens=8),
+            admission=AdmissionConfig(high_watermark=0.9,
+                                      low_watermark=0.7),
+            control=ctl)
+        reqs = workload()
+        got = _drive_all(server, reqs)
+        assert all(len(o) == 8 for o in got.values())
+        summaries[label] = server.summary()
+
+    off, on = summaries["off"], summaries["on"]
+    assert off["finished"] == on["finished"] == 16
+    assert off["deferred"] > 0                  # the burst IS KV-tight
+    assert on["slo_e2e_attainment"] > off["slo_e2e_attainment"]
+    assert on["control_commits"] > 0
+    assert on["control_overrides_open"] == 0
+    # e2e attainment counts the admission-gate wait the engine-phase
+    # verdict cannot see; it can only be <= the engine-phase number
+    for s in (off, on):
+        assert s["slo_e2e_attainment"] <= s["slo_ttft_attainment"] + 1e-9
+
+
+def test_control_metrics_families_and_summary_keys(vlm):
+    """metrics_snapshot() exports the repro_control_* families plus the
+    admission_draining gauge; summary() carries the control_* keys."""
+    server = vlm.serve_async(_ec(), gen=GEN, control=True)
+    _drive_all(server, _reqs(vlm.cfg, 3, seed=11))
+    text = server.metrics_snapshot()
+    for family in ("repro_admission_draining", "repro_control_level",
+                   "repro_control_actuations_total",
+                   "repro_control_commits_total",
+                   "repro_control_overrides_open"):
+        assert family in text, family
+    for kind in _ACTUATION_KINDS:
+        assert f'kind="{kind}"' in text
+    s = server.summary()
+    for key in ("control_level", "control_commits", "control_reverts",
+                "control_level_changes", "control_overrides_open"):
+        assert key in s, key
+
+    # a fleet renders the shared controller ONCE, at router level
+    router = vlm.serve_cluster(2, _ec(), gen=GEN, control=True)
+    _drive_all(router, _reqs(vlm.cfg, 4, seed=12))
+    text = router.metrics_snapshot()
+    assert text.count("# TYPE repro_control_level gauge") == 1
+    assert 'repro_control_level{replica="0"}' in text
+    assert 'repro_control_level{replica="1"}' in text
+    assert "control_level" in router.summary()
+
+
+def test_defer_only_snapshot_has_no_control_families(vlm):
+    server = vlm.serve_async(_ec(), gen=GEN)
+    _drive_all(server, _reqs(vlm.cfg, 2, seed=13))
+    text = server.metrics_snapshot()
+    assert "repro_control_" not in text
+    assert "repro_admission_draining" in text
+    assert "control_level" not in server.summary()
+
+
+# ------------------------------------------------------ sweep harness --
+
+
+def _pt(key, quality, goodput, ttft, tpot):
+    return {"key": key, "quality_proxy": quality, "slo_goodput": goodput,
+            "ttft_p95_s": ttft, "tpot_p95_s": tpot}
+
+
+def test_dominates_and_frontier_on_hand_built_points():
+    a = _pt("a", 1.0, 1.0, 0.010, 0.002)
+    b = _pt("b", 0.5, 0.9, 0.005, 0.001)      # faster, lower quality
+    c = _pt("c", 0.5, 0.8, 0.012, 0.003)      # dominated by a AND b
+    d = _pt("d", 1.0, 1.0, 0.010, 0.002)      # ties a: neither dominates
+    assert dominates(a, c)
+    assert dominates(b, c)
+    assert not dominates(a, b) and not dominates(b, a)
+    assert not dominates(a, d) and not dominates(d, a)
+    front = pareto_frontier([a, b, c, d])
+    keys = {p["key"] for p in front}
+    assert keys == {"a", "b", "d"}
+    # a missing metric counts worst-case: it cannot dominate a complete
+    # point, and a complete strictly-better one dominates it
+    e = {"key": "e", "quality_proxy": 0.4, "slo_goodput": 0.5,
+         "ttft_p95_s": 0.02}
+    assert not dominates(e, c)
+    assert dominates(b, e)
+
+
+def test_point_key_and_sweep_config_grid():
+    cfg = SweepConfig()
+    n_grid = (len(cfg.presets) * len(cfg.decoders) * len(cfg.mixes)
+              * len(cfg.rates))
+    assert n_grid >= 8                  # the committed-artifact floor
+    pt = {"compression": "fastv-0.5", "decoder": "greedy", "mix": "2x",
+          "rate_rps": 800.0}
+    assert point_key(pt) == "fastv-0.5|greedy|2x|r800"
+
+
+def test_committed_pareto_baseline_gates():
+    """The committed BENCH_pareto.json: schema v1, >= 8 swept points,
+    the stored frontier matches a recompute from the stored points, and
+    the regress gate keys rows by the composite sweep identity so a
+    self-compare is clean (exit 0) with every row matched."""
+    path = os.path.join(REPO, "BENCH_pareto.json")
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema_version"] == 1
+    assert doc["kind"] == "pareto_sweep"
+    assert len(doc["points"]) >= 8
+    front_keys = {point_key(p) for p in pareto_frontier(doc["points"])}
+    assert front_keys == set(doc["frontier"])
+    assert front_keys == {point_key(p) for p in doc["points"]
+                          if p["on_frontier"]}
+    assert 0 < len(front_keys) < len(doc["points"])
+    for p in doc["points"]:
+        assert 0.0 <= p["quality_proxy"] <= 1.0
+        assert p["ttft_p95_s"] > 0.0
+        # greedy rows carry no acceptance discount: quality is exactly
+        # the retained-visual-token ratio of the preset
+        if p["decoder"] == "greedy":
+            assert p["quality_proxy"] == p["retained_visual_ratio"] > 0.0
+
+    # composite row identity: reordering rows is NOT a diff
+    flat = regress.flatten(doc)
+    assert any("fastv-0.5|greedy" in k for k in flat)
+    shuffled = dict(doc, points=list(reversed(doc["points"])))
+    assert regress.flatten(shuffled) == flat
+    regressions, compared = regress.compare(doc, shuffled, tolerance=0.0)
+    assert regressions == [] and len(compared) > 0
+    assert regress.main([path, path, "--tolerance", "0.5"]) == 0
